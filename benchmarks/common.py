@@ -1,0 +1,94 @@
+"""Shared benchmark scaffolding.
+
+All convergence-style benchmarks use the paper's setting: a pre-trained
+base model (cached to results/) is *fine-tuned* under each compression
+scheme.  The model is a reduced GPT-2 (the paper's family) sized so a
+full benchmark suite completes on one CPU core; the claims being checked
+are *relative* (AQ-SGD vs DirectQ vs FP32), which transfer across scale —
+the paper itself shows larger models tolerate compression better (§H.5).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.core.aqsgd import CompressionConfig
+from repro.data.pipeline import Dataset, DatasetConfig
+from repro.models import model as Mo
+from repro.optim.adamw import AdamWConfig
+from repro.training import simulated as sim
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+os.makedirs(RESULTS, exist_ok=True)
+
+MCFG = get_config("gpt2-xl-paper", smoke=True).with_(num_layers=4)
+PRETRAIN_DS = DatasetConfig(num_samples=64, seq_len=64, vocab_size=512,
+                            seed=3)
+FINETUNE_DS = DatasetConfig(num_samples=48, seq_len=64, vocab_size=512,
+                            seed=11)
+BATCH = 8
+
+
+def base_params(pretrain_steps: int = 120):
+    """Train (once) and cache the 'foundation model' the benchmarks
+    fine-tune."""
+    path = os.path.join(RESULTS, "base_params.npz")
+    like = Mo.init_params(MCFG, jax.random.PRNGKey(0))
+    if os.path.exists(path):
+        try:
+            return ckpt.restore(path, like)
+        except Exception:                     # stale cache
+            os.remove(path)
+    tcfg = sim.SimTrainConfig(
+        num_stages=1, compression=CompressionConfig(mode="fp32"),
+        optimizer=AdamWConfig(lr=2e-3, warmup_steps=10,
+                              total_steps=pretrain_steps,
+                              schedule="constant"))
+    state, losses = sim.train(MCFG, tcfg, Dataset(PRETRAIN_DS),
+                              num_steps=pretrain_steps, batch_size=BATCH,
+                              key=jax.random.PRNGKey(0))
+    print(f"# pretrained base: loss {losses[0]:.3f} -> "
+          f"{np.mean(losses[-5:]):.3f}")
+    ckpt.save(path, state["params"])
+    return state["params"]
+
+
+def finetune(mode: str, fw: int = 4, bw: int = 8, *, steps: int = 60,
+             stages: int = 4, buffer_bits: int = 0, dp_grad_bits: int = 0,
+             dp_workers: int = 1, lr: float = 3e-4, seed: int = 0,
+             params=None):
+    """Fine-tune under a compression scheme; returns (losses, seconds)."""
+    tcfg = sim.SimTrainConfig(
+        num_stages=stages,
+        compression=CompressionConfig(mode=mode, fw_bits=fw, bw_bits=bw,
+                                      buffer_bits=buffer_bits),
+        optimizer=AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps,
+                              schedule="constant"),
+        dp_grad_bits=dp_grad_bits, dp_workers=dp_workers)
+    t0 = time.time()
+    _, losses = sim.train(MCFG, tcfg, Dataset(FINETUNE_DS),
+                          num_steps=steps, batch_size=BATCH,
+                          key=jax.random.PRNGKey(seed),
+                          initial_params=params if params is not None
+                          else base_params())
+    return losses, time.time() - t0
+
+
+def tail_loss(losses, k: int = 8) -> float:
+    return float(np.mean(losses[-k:]))
+
+
+def write_csv(name: str, header: str, rows: list):
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"# wrote {path}")

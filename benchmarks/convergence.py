@@ -1,0 +1,51 @@
+"""Fig. 1a / Fig. 3 reproduction: fine-tuning convergence under
+FP32 / DirectQ / AQ-SGD at aggressive bit widths.
+
+Paper claim being validated: AQ-SGD tracks FP32 at fw2-4 bits while
+DirectQ converges to a clearly worse loss (or diverges)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import finetune, tail_loss, write_csv
+
+
+SETTINGS = [("fw2 bw4", 2, 4), ("fw3 bw6", 3, 6), ("fw4 bw8", 4, 8)]
+
+
+def main(steps: int = 60) -> list:
+    rows = []
+    curves = {}
+    losses, secs = finetune("fp32", steps=steps)
+    curves["fp32"] = losses
+    fp = tail_loss(losses)
+    rows.append(("fp32", "-", f"{fp:.4f}", f"{secs:.1f}"))
+    print(f"convergence,fp32,-,{fp:.4f}")
+    for label, fw, bw in SETTINGS:
+        for mode in ("directq", "aqsgd"):
+            losses, secs = finetune(mode, fw, bw, steps=steps)
+            curves[f"{mode} {label}"] = losses
+            tl = tail_loss(losses)
+            rows.append((mode, label, f"{tl:.4f}", f"{secs:.1f}"))
+            print(f"convergence,{mode},{label},{tl:.4f}")
+    write_csv("convergence.csv", "method,bits,final_loss,seconds", rows)
+    # loss curves for the figure
+    n = max(len(v) for v in curves.values())
+    cols = sorted(curves)
+    write_csv("convergence_curves.csv", "step," + ",".join(cols),
+              [[i] + [f"{curves[c][i]:.4f}" if i < len(curves[c]) else ""
+                      for c in cols] for i in range(n)])
+
+    # the paper's qualitative ordering must hold at every bit width
+    by = {(r[0], r[1]): float(r[2]) for r in rows}
+    ok = all(by[("aqsgd", lab)] < by[("directq", lab)]
+             for lab, _, _ in SETTINGS)
+    gap = all(abs(by[("aqsgd", lab)] - fp)
+              < abs(by[("directq", lab)] - fp) for lab, _, _ in SETTINGS)
+    print(f"convergence,claim_aqsgd_beats_directq,,{ok}")
+    print(f"convergence,claim_aqsgd_closer_to_fp32,,{gap}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

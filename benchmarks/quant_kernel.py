@@ -1,0 +1,68 @@
+"""Kernel microbench: the AQ-SGD boundary codec.
+
+Wall-clock on this container measures the *interpret-mode / XLA-CPU*
+path, so the numbers that matter for TPU are the analytic ones: fused
+HBM traffic vs unfused, and wire-compression ratios.  We report both.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_csv
+from repro.core import quantization as Q
+from repro.kernels import ops
+
+
+def _time(f, *a, n=5):
+    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else None
+    t0 = time.time()
+    for _ in range(n):
+        r = f(*a)
+        jax.tree.leaves(r)[0].block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> list:
+    rows = []
+    r, d = 4096, 4096
+    a = jax.random.normal(jax.random.PRNGKey(0), (r, d))
+    m = a + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (r, d))
+
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("bits",))
+    def xla_codec(a, m, *, bits):
+        codes, scale = Q.quantize(a - m, bits, stochastic=False)
+        return Q.pack_codes(codes, bits), scale
+
+    for bits in (2, 4, 8):
+        us_xla = _time(lambda: xla_codec(a, m, bits=bits))
+        rows.append((f"xla_codec_b{bits}", f"{us_xla:.0f}", "", ""))
+        print(f"quant_kernel,xla_codec_b{bits},{us_xla:.0f}us,"
+              f"(XLA-CPU reference path)")
+    for bits in (2, 4, 8):
+        us = _time(lambda: ops.boundary_compress(a, m, bits=bits), n=2)
+        raw = r * d * 4
+        wire = Q.wire_bytes((r, d), bits)
+        # fused kernel: read a+m, write packed+scale+m_new
+        fused_traffic = raw * 2 + wire + raw
+        # unfused chain: sub, abs-max, div, round, pack, dequant, add —
+        # each materializes an (r, d) intermediate
+        unfused_traffic = raw * 2 + 6 * raw + wire
+        rows.append((f"boundary_compress_b{bits}", f"{us:.0f}",
+                     f"ratio={raw/wire:.1f}x",
+                     f"traffic_saving={unfused_traffic/fused_traffic:.2f}x"))
+        print(f"quant_kernel,boundary_compress_b{bits},{us:.0f}us,"
+              f"wire_ratio={raw/wire:.1f}x,"
+              f"fused_traffic_saving={unfused_traffic/fused_traffic:.2f}x")
+    write_csv("quant_kernel.csv", "name,us_per_call,wire_ratio,traffic",
+              rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  convergence       Fig. 1a / Fig. 3   (loss vs steps per scheme)
+  delta_magnitude   Fig. 1b            (|activation| vs |delta|)
+  throughput_model  Tables 2-3 / Fig. 4 (throughput vs bandwidth)
+  e2e_compression   Fig. 5             (+ DP gradient compression)
+  ablations         Fig. 9             (stages / bits / buffer precision)
+  storage_cost      §3.3 / App. G      (buffer storage, prefetch hiding)
+  quant_kernel      (ours)             (boundary codec microbench)
+
+Prints ``name,...,derived`` CSV lines; full tables land in results/*.csv.
+Roofline tables come from ``python -m repro.launch.dryrun`` (see
+EXPERIMENTS.md §Dry-run / §Roofline).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names")
+    ap.add_argument("--steps", type=int, default=50,
+                    help="fine-tune steps per convergence cell")
+    args = ap.parse_args()
+
+    from benchmarks import (ablations, convergence, delta_magnitude,
+                            e2e_compression, quant_kernel, storage_cost,
+                            throughput_model)
+    all_benches = [
+        ("convergence", lambda: convergence.main(args.steps)),
+        ("delta_magnitude", lambda: delta_magnitude.main()),
+        ("throughput_model", throughput_model.main),
+        ("e2e_compression", lambda: e2e_compression.main(args.steps)),
+        ("ablations", lambda: ablations.main(args.steps)),
+        ("storage_cost", storage_cost.main),
+        ("quant_kernel", quant_kernel.main),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in all_benches:
+        if only and name not in only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""§3.3 / Appendix G reproduction: AQ-SGD's storage-for-communication
+trade, across the paper's setting and every assigned architecture.
+
+Also models the prefetch-hiding claim: loading m(ξ) from host DRAM/SSD
+is hidden under the stage's forward compute when
+t_load < t_forward (per microbatch)."""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.configs.base import ARCHS, get_config
+from repro.core import aqsgd
+from repro.core.aqsgd import CompressionConfig
+
+# paper's LM corpus scale: WikiText2, 2M tokens at seq 1024
+N_SAMPLES, SEQ, K = 2_000_000 // 1024, 1024, 8
+DRAM_BW, SSD_BW = 50e9, 3e9            # bytes/s
+V5E_FLOPS, MFU = 197e12, 0.4
+
+
+def main() -> list:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        d = cfg.d_model
+        for z, label in ((0, "fp32"), (8, "z8"), (4, "z4")):
+            cc = CompressionConfig(mode="aqsgd", buffer_bits=z)
+            nbytes = aqsgd.buffer_nbytes(cc, K - 1, N_SAMPLES, SEQ, d)
+            rows.append((arch, label, f"{nbytes/1e9:.1f}"))
+        # prefetch hiding: per microbatch (1 sample), load vs fwd compute
+        load_ms = SEQ * d * 4 / SSD_BW * 1e3
+        fwd_ms = 2 * cfg.active_params_count() / K * SEQ \
+            / (V5E_FLOPS * MFU) * 1e3
+        hidden = load_ms < fwd_ms
+        print(f"storage,{arch},buffer_fp32_GB="
+              f"{float(rows[-3][2]):.1f},ssd_load={load_ms:.1f}ms,"
+              f"fwd={fwd_ms:.1f}ms,hidden={hidden}")
+    write_csv("storage_cost.csv", "arch,buffer_precision,total_GB", rows)
+    # the paper's GPT2-XL example: ~0.1 TB per boundary-side at fp32
+    gpt2 = [r for r in rows if r[0] == "gpt2-xl-paper" and r[1] == "fp32"]
+    print(f"storage,paper_gpt2xl_fp32_buffers,,{gpt2[0][2]}GB "
+          f"(paper §3.3 cites ~1TB across machines+both sides)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

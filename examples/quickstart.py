@@ -1,0 +1,44 @@
+"""Quickstart: fine-tune a small LM over a simulated slow network with
+AQ-SGD activation compression (2-bit forward / 4-bit backward), and see
+that it tracks uncompressed training where direct quantization does not.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.aqsgd import CompressionConfig
+from repro.data.pipeline import Dataset, DatasetConfig
+from repro.optim.adamw import AdamWConfig
+from repro.training import simulated as sim
+
+# a 4-layer GPT-2-family model, cut into 4 pipeline stages (3 boundaries)
+cfg = get_config("gpt2-xl-paper", smoke=True).with_(num_layers=4)
+data = Dataset(DatasetConfig(num_samples=32, seq_len=32, vocab_size=512))
+
+print("pre-training a base model (fp32)...")
+base_tcfg = sim.SimTrainConfig(
+    num_stages=1, compression=CompressionConfig(mode="fp32"),
+    optimizer=AdamWConfig(lr=2e-3, warmup_steps=5, schedule="constant"))
+base_state, base_losses = sim.train(cfg, base_tcfg, data, num_steps=60,
+                                    batch_size=8)
+print(f"  base loss: {base_losses[0]:.2f} -> {np.mean(base_losses[-5:]):.2f}")
+
+results = {}
+for mode in ("fp32", "aqsgd", "directq"):
+    tcfg = sim.SimTrainConfig(
+        num_stages=4,
+        compression=CompressionConfig(mode=mode, fw_bits=2, bw_bits=4),
+        optimizer=AdamWConfig(lr=3e-4, warmup_steps=5,
+                              schedule="constant"))
+    _, losses = sim.train(cfg, tcfg, data, num_steps=40, batch_size=8,
+                          initial_params=base_state["params"])
+    results[mode] = float(np.mean(losses[-8:]))
+    print(f"fine-tune [{mode:8s}] fw2 bw4: final loss {results[mode]:.4f}")
+
+print()
+print(f"AQ-SGD gap to FP32:  {results['aqsgd'] - results['fp32']:+.4f}")
+print(f"DirectQ gap to FP32: {results['directq'] - results['fp32']:+.4f}")
+assert results["aqsgd"] < results["directq"], "paper claim violated?!"
+print("AQ-SGD compresses the wire 16x (fp32 -> 2 bit) and still tracks "
+      "FP32 - the paper's headline result.")

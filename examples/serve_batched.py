@@ -1,0 +1,43 @@
+"""Batched serving example: prefill a batch of prompts, then decode with
+KV caches through the public serve path (the same code the decode_32k /
+long_500k dry-run shapes lower at 256-chip scale).
+
+Runs three model families to show the cache machinery: dense GQA
+(gemma2), attention-free SSM (mamba2), hybrid (zamba2).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import model as Mo
+
+BATCH, PROMPT, GEN = 4, 24, 12
+
+for arch in ("gemma2-9b", "mamba2-1.3b", "zamba2-2.7b"):
+    cfg = get_config(arch, smoke=True)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    caches = Mo.init_caches(cfg, BATCH, PROMPT + GEN, jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT),
+                                 0, cfg.vocab_size)
+
+    t0 = time.time()
+    logits, caches = Mo.forward_with_caches(params, cfg, prompts, caches,
+                                            logits_last_only=True)
+    step = jax.jit(lambda p, c, t: Mo.forward_with_caches(
+        p, cfg, t, c, logits_last_only=True))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    out = [tok]
+    for _ in range(GEN - 1):
+        logits, caches = step(params, caches, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"{arch:14s} [{cfg.family:6s}] prefill {BATCH}x{PROMPT} + "
+          f"decode {GEN}: {dt:.1f}s; sample: {gen[0][:8].tolist()}")
+print("serving path OK for attention, SSM and hybrid cache types")

@@ -1,0 +1,49 @@
+"""Split learning with AQ-SGD (paper §H.6).
+
+A client holds the input layers (private data side), the server holds
+the middle of the network, and the client holds the head (private labels
+side) — the model is cut twice and BOTH cuts exchange compressed
+activations/gradients over the slow client<->server link.  AQ-SGD keeps
+2-bit uplink traffic trainable where DirectQ degrades.
+
+    PYTHONPATH=src python examples/split_learning.py
+"""
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.aqsgd import CompressionConfig
+from repro.core.quantization import wire_bytes
+from repro.data.pipeline import Dataset, DatasetConfig
+from repro.optim.adamw import AdamWConfig
+from repro.training import simulated as sim
+
+# 3 stages = client-bottom | server | client-top  (two cut layers)
+cfg = get_config("gpt2-xl-paper", smoke=True).with_(num_layers=3)
+data = Dataset(DatasetConfig(num_samples=32, seq_len=32, vocab_size=512,
+                             seed=21))
+
+base_tcfg = sim.SimTrainConfig(
+    num_stages=1, compression=CompressionConfig(mode="fp32"),
+    optimizer=AdamWConfig(lr=2e-3, warmup_steps=5, schedule="constant"))
+base, _ = sim.train(cfg, base_tcfg, data, num_steps=60, batch_size=8)
+
+print("split learning: client | server | client, 2-bit uplink, "
+      "8-bit downlink")
+final = {}
+for mode in ("fp32", "aqsgd", "directq"):
+    tcfg = sim.SimTrainConfig(
+        num_stages=3,
+        compression=CompressionConfig(mode=mode, fw_bits=2, bw_bits=8),
+        optimizer=AdamWConfig(lr=3e-4, warmup_steps=5,
+                              schedule="constant"))
+    _, losses = sim.train(cfg, tcfg, data, num_steps=40, batch_size=8,
+                          initial_params=base["params"])
+    final[mode] = float(np.mean(losses[-8:]))
+    print(f"  [{mode:8s}] final loss {final[mode]:.4f}")
+
+raw = 8 * 32 * cfg.d_model * 4
+wire = wire_bytes((8 * 32, cfg.d_model), 2)
+print(f"\nper-batch uplink: {raw/1e3:.0f} KB -> {wire/1e3:.0f} KB "
+      f"({raw/wire:.0f}x less client bandwidth)")
+assert final["aqsgd"] < final["directq"]
+print("AQ-SGD holds model quality at federated-client bandwidths (§H.6)")

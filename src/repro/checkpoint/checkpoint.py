@@ -1,0 +1,46 @@
+"""Checkpointing: flatten any pytree (params, optimizer state, AQ-SGD
+message buffers) into a single .npz with path-encoded keys.  No orbax in
+this container; numpy archives are portable and adequate."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":     # ml_dtypes (bf16/f8): store
+            arr = arr.astype(np.float32)      # as f32, restore recasts
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes must match)."""
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_keys, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(np.asarray(jnp.asarray(arr).astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef.structure
+                                        if hasattr(treedef, "structure")
+                                        else treedef, out)

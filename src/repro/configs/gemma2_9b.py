@@ -1,0 +1,30 @@
+"""gemma2-9b [dense] — local/global alternating attention + logit softcap.
+
+[arXiv:2408.00118].  42L, d_model=3584, 16H (GQA kv=8, head_dim=256),
+d_ff=14336, vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    source="arXiv:2408.00118",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    sliding_window=4096,
+    local_global_period=2,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    act="gelu",
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, sliding_window=16,
+)

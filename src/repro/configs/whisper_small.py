@@ -1,0 +1,31 @@
+"""whisper-small [audio] — encoder-decoder transformer backbone.
+
+[arXiv:2212.04356].  12L enc + 12L dec, d_model=768, 12H, d_ff=3072,
+vocab=51865.  The mel-spectrogram + conv frontend is a STUB per the
+assignment: ``input_specs()`` supplies 1500 precomputed frame embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=12,                  # decoder layers
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    encoder_layers=12,
+    encoder_seq=1500,               # 30 s of audio at 50 Hz (conv stub)
+    cross_attention=True,
+    act="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.with_(
+    num_layers=2, d_model=256, num_heads=4, num_kv_heads=4, head_dim=64,
+    d_ff=512, vocab_size=512, encoder_layers=2, encoder_seq=32,
+)

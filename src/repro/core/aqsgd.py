@@ -1,0 +1,188 @@
+"""AQ-SGD: activation-delta compression at pipeline boundaries.
+
+Implements Algorithm 1/2 of the paper in functional JAX form:
+
+* per-(boundary, sample) message buffers ``m(ξ)`` — both sides of a real
+  boundary keep bit-identical copies because both apply the *same*
+  quantized delta; functionally we carry one logical buffer;
+* first-visit sends full precision (``seen`` mask);
+* later visits send ``Q(a(ξ, x_t) − m(ξ))`` and update
+  ``m(ξ) ← m(ξ) + Q(·)``;
+* machine b computes on ``m(ξ)``, i.e. the boundary is a straight-through
+  estimator: forward value = m, backward gradient = Q_bw(∇) routed to
+  machine a's activation (custom_vjp below);
+* the buffer itself may be stored in z bits (paper §H.5,
+  "number of bits for previous messages").
+
+``DirectQ`` (AC-GC / TinyScript style, the paper's baseline) and ``fp32``
+(no compression) share the same interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as Q
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "aqsgd"            # fp32 | directq | aqsgd
+    fw_bits: int = 4               # forward activation bits
+    bw_bits: int = 8               # backward activation-gradient bits
+    buffer_bits: int = 0           # 0 = raw buffer; else z-bit stored (§H.5)
+    buffer_dtype: str = "float32"  # raw-buffer storage dtype
+    stochastic: bool = True
+
+    def with_(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def compresses(self) -> bool:
+        return self.mode != "fp32"
+
+    def fw_wire_bytes(self, shape) -> int:
+        if not self.compresses:
+            return int(np.prod(shape)) * 4
+        return Q.wire_bytes(shape, self.fw_bits)
+
+    def bw_wire_bytes(self, shape) -> int:
+        if not self.compresses:
+            return int(np.prod(shape)) * 4
+        return Q.wire_bytes(shape, self.bw_bits)
+
+
+# ---------------------------------------------------------------------------
+# message buffers
+# ---------------------------------------------------------------------------
+
+def init_buffers(cc: CompressionConfig, num_boundaries: int,
+                 num_samples: int, seq: int, d: int) -> Optional[dict]:
+    """Buffers for the whole dataset (AQ-SGD only)."""
+    if cc.mode != "aqsgd":
+        return None
+    nb = num_boundaries
+    bufs = {"seen": jnp.zeros((nb, num_samples), bool)}
+    if cc.buffer_bits:
+        pw = Q.packed_width(d, cc.buffer_bits)
+        bufs["codes"] = jnp.zeros((nb, num_samples, seq, pw), jnp.uint8)
+        bufs["scale"] = jnp.ones((nb, num_samples, seq, 1), jnp.float32)
+    else:
+        bufs["m"] = jnp.zeros((nb, num_samples, seq, d),
+                              jnp.dtype(cc.buffer_dtype))
+    return bufs
+
+
+def buffer_nbytes(cc: CompressionConfig, num_boundaries: int,
+                  num_samples: int, seq: int, d: int) -> int:
+    """Storage cost of the message buffers (paper §3.3 / §G)."""
+    if cc.mode != "aqsgd":
+        return 0
+    nb = num_boundaries
+    if cc.buffer_bits:
+        return nb * num_samples * seq * (Q.packed_width(d, cc.buffer_bits)
+                                         + 4)
+    return nb * num_samples * seq * d * jnp.dtype(cc.buffer_dtype).itemsize
+
+
+def read_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
+                sample_ids: jax.Array, d: int) -> jax.Array:
+    """-> m (B, S, d) float32 for the given samples."""
+    if cc.buffer_bits:
+        codes = bufs["codes"][boundary][sample_ids]
+        scale = bufs["scale"][boundary][sample_ids]
+        return Q.dequantize(Q.unpack_codes(codes, cc.buffer_bits, d),
+                            scale, cc.buffer_bits)
+    return bufs["m"][boundary][sample_ids].astype(jnp.float32)
+
+
+def write_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
+                 sample_ids: jax.Array, m_new: jax.Array) -> dict:
+    bufs = dict(bufs)
+    if cc.buffer_bits:
+        codes, scale = Q.quantize(m_new, cc.buffer_bits, stochastic=False)
+        bufs["codes"] = bufs["codes"].at[boundary, sample_ids].set(
+            Q.pack_codes(codes, cc.buffer_bits))
+        bufs["scale"] = bufs["scale"].at[boundary, sample_ids].set(scale)
+    else:
+        bufs["m"] = bufs["m"].at[boundary, sample_ids].set(
+            m_new.astype(bufs["m"].dtype))
+    bufs["seen"] = bufs["seen"].at[boundary, sample_ids].set(True)
+    return bufs
+
+
+# ---------------------------------------------------------------------------
+# the boundary op (forward substitution + quantized backward gradient)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_ste(bw_bits: int, stochastic: bool):
+    """Straight-through boundary: forward value = message m, backward
+    gradient = Q_bw(∇) (the paper quantizes the backward activation
+    gradient directly — Algorithm 1 line 11)."""
+
+    @jax.custom_vjp
+    def ste(h, m_used, key):
+        del h, key
+        return m_used
+
+    def fwd(h, m_used, key):
+        del h
+        return m_used, key
+
+    def bwd(key, g):
+        if bw_bits >= 32:
+            gq = g
+        else:
+            gq = Q.qdq(g, bw_bits, stochastic=stochastic, key=key)
+        return (gq, jnp.zeros_like(g),
+                np.zeros(key.shape, jax.dtypes.float0))
+
+    ste.defvjp(fwd, bwd)
+    return ste
+
+
+def apply_boundary(cc: CompressionConfig, h: jax.Array, key: jax.Array,
+                   m: Optional[jax.Array] = None,
+                   seen: Optional[jax.Array] = None,
+                   quantize_bw: bool = True):
+    """One pipeline-boundary crossing.
+
+    h: (B, S, d) activations leaving machine a (differentiable).
+    m: (B, S, d) previous messages for these samples (aqsgd only).
+    seen: (B,) first-visit mask.
+
+    Returns (h_out, m_new):
+      h_out — what machine b computes on (forward = message, backward =
+              Q_bw(gradient) via the straight-through custom_vjp);
+      m_new — updated messages to persist (None unless aqsgd).
+    """
+    kf, kb = jax.random.split(key)
+    dtype = h.dtype
+    h_sg = jax.lax.stop_gradient(h).astype(jnp.float32)
+
+    if cc.mode == "fp32":
+        return h, None
+    if cc.mode == "directq":
+        m_used = Q.qdq(h_sg, cc.fw_bits, stochastic=cc.stochastic, key=kf)
+        m_new = None
+    elif cc.mode == "aqsgd":
+        assert m is not None and seen is not None
+        delta_q = Q.qdq(h_sg - m, cc.fw_bits, stochastic=cc.stochastic,
+                        key=kf)
+        m_upd = m + delta_q
+        m_used = jnp.where(seen[:, None, None], m_upd, h_sg)
+        m_new = m_used
+    else:
+        raise ValueError(cc.mode)
+
+    bw_bits = cc.bw_bits if quantize_bw else 32
+    ste = _make_ste(bw_bits, cc.stochastic)
+    h_out = ste(h, m_used.astype(dtype), kb)
+    return h_out, m_new

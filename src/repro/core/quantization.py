@@ -1,0 +1,157 @@
+"""Uniform activation quantization used by AQ-SGD and DirectQ.
+
+The paper's Q (§4.1): normalize a vector into [-1, 1] by its absolute
+maximum and partition the range uniformly into 2**b intervals
+(Chakrabarti & Moseley 2019).  The theory (Thm 3.1) requires Q to be
+*unbiased* with relative error ``E||x - Q(x)|| <= c_Q ||x||`` — satisfied
+here by stochastic rounding on the uniform grid (the grid always covers
+the input because the scale is the absmax).
+
+Two forms are provided:
+
+* ``quantize`` / ``dequantize`` / ``pack_codes`` / ``unpack_codes`` — the
+  *wire* form.  Codes are uint8 (2/4/8 bits packed densely) plus a float
+  scale per row; this is the payload that actually crosses the pipeline
+  boundary (``ppermute``), so compiled collective bytes shrink by the
+  true compression ratio.
+* ``qdq`` — quantize→dequantize "fake quant" used by the bit-faithful
+  simulated trainer; numerically identical to a wire round-trip.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def absmax_scale(x: jax.Array, per_row: bool = True) -> jax.Array:
+    """Positive scale such that x/scale ∈ [-1, 1].
+
+    per_row=True gives one scale per trailing-dim row (the paper's
+    per-vector normalization); False gives a single per-tensor scale.
+    """
+    x = x.astype(jnp.float32)
+    if per_row:
+        s = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    else:
+        s = jnp.max(jnp.abs(x))
+    return jnp.maximum(s, _EPS)
+
+
+def _grid_positions(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Map x into continuous grid coordinates [0, 2**bits - 1]."""
+    levels = (1 << bits) - 1
+    y = (x.astype(jnp.float32) / scale + 1.0) * (0.5 * levels)
+    return jnp.clip(y, 0.0, float(levels))
+
+
+def quantize(
+    x: jax.Array,
+    bits: int,
+    *,
+    stochastic: bool = True,
+    key: Optional[jax.Array] = None,
+    per_row: bool = True,
+    scale: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize to uint8 codes in [0, 2**bits - 1] plus float32 scale."""
+    assert 1 <= bits <= 8, bits
+    if scale is None:
+        scale = absmax_scale(x, per_row=per_row)
+    y = _grid_positions(x, scale, bits)
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic quantization needs a PRNG key")
+        lo = jnp.floor(y)
+        frac = y - lo
+        bump = jax.random.bernoulli(key, frac).astype(jnp.float32)
+        codes = lo + bump
+    else:
+        codes = jnp.round(y)
+    return codes.astype(jnp.uint8), scale
+
+
+def dequantize(codes: jax.Array, scale: jax.Array, bits: int,
+               dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    levels = (1 << bits) - 1
+    x = codes.astype(jnp.float32) * (2.0 / levels) - 1.0
+    return (x * scale).astype(dtype)
+
+
+def qdq(
+    x: jax.Array,
+    bits: int,
+    *,
+    stochastic: bool = True,
+    key: Optional[jax.Array] = None,
+    per_row: bool = True,
+) -> jax.Array:
+    """Fake-quantization round trip; preserves input dtype."""
+    codes, scale = quantize(x, bits, stochastic=stochastic, key=key,
+                            per_row=per_row)
+    return dequantize(codes, scale, bits, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense bit-packing — the wire format.
+# ---------------------------------------------------------------------------
+
+def codes_per_byte(bits: int) -> int:
+    assert bits in (1, 2, 4, 8), f"packing supports 1/2/4/8 bits, got {bits}"
+    return 8 // bits
+
+
+def packed_width(n: int, bits: int) -> int:
+    """Packed bytes per row.  Byte-aligned (1/2/4/8 bit) formats pack k
+    codes/byte; other widths (e.g. the paper's fw3/bw6) are bit-packed —
+    width is ceil(n*bits/8)."""
+    if bits in (1, 2, 4, 8):
+        k = codes_per_byte(bits)
+        return (n + k - 1) // k
+    return (n * bits + 7) // 8
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack uint8 codes (< 2**bits) densely along the last axis."""
+    k = codes_per_byte(bits)
+    if k == 1:
+        return codes
+    n = codes.shape[-1]
+    pad = (-n) % k
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    grouped = codes.reshape(*codes.shape[:-1], -1, k).astype(jnp.uint32)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)
+    packed = jnp.sum(grouped << shifts, axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of pack_codes; n = original last-axis length."""
+    k = codes_per_byte(bits)
+    if k == 1:
+        return packed[..., :n]
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    vals = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    flat = vals.reshape(*packed.shape[:-1], -1)
+    return flat[..., :n].astype(jnp.uint8)
+
+
+def wire_bytes(shape: tuple[int, ...], bits: int,
+               scale_bytes: int = 4) -> int:
+    """Bytes on the wire for a quantized tensor with per-row scales."""
+    *rows, n = shape
+    nrows = int(functools.reduce(lambda a, b: a * b, rows, 1))
+    return nrows * packed_width(n, bits) + nrows * scale_bytes
+
+
+__all__ = [
+    "absmax_scale", "quantize", "dequantize", "qdq",
+    "codes_per_byte", "packed_width", "pack_codes", "unpack_codes",
+    "wire_bytes",
+]

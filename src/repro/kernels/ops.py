@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the TPU
+mosaic pipeline is the target); set REPRO_PALLAS_INTERPRET=0 on real
+hardware.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import quant_pack as _qp
+from repro.kernels import flash_attention as _fa
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def boundary_compress(a, m, *, bits: int, block_r: int = 128):
+    """Sender side of an AQ-SGD boundary: (a, m) -> (packed, scale, m_new).
+    a, m: any (..., d); rows are flattened for the kernel grid."""
+    shape = a.shape
+    a2 = a.reshape(-1, shape[-1])
+    m2 = m.reshape(-1, shape[-1])
+    packed, scale, m_new = _qp.delta_quantize_pack(
+        a2, m2, bits=bits, block_r=block_r, interpret=INTERPRET)
+    return (packed.reshape(*shape[:-1], -1),
+            scale.reshape(*shape[:-1], 1),
+            m_new.reshape(shape))
+
+
+def boundary_decompress(packed, scale, m, *, bits: int,
+                        block_r: int = 128):
+    """Receiver side: reconstruct m_new = m + dequant(unpack(packed))."""
+    shape = m.shape
+    out = _qp.dequant_unpack_accumulate(
+        packed.reshape(-1, packed.shape[-1]),
+        scale.reshape(-1, 1), m.reshape(-1, shape[-1]),
+        bits=bits, block_r=block_r, interpret=INTERPRET)
+    return out.reshape(shape)
+
+
+def flash_attention(q, k, v, **kw):
+    """(B, H, Sq, hd) x (B, Hk, Sk, hd) -> (B, H, Sq, hd)."""
+    kw.setdefault("interpret", INTERPRET)
+    return _fa.flash_attention_fwd(q, k, v, **kw)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth
+swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def delta_quantize_pack_ref(a, m, bits: int):
+    """AQ-SGD sender side: delta -> rowwise absmax scale -> b-bit codes ->
+    dense uint8 packing.  a, m: (R, d) float.  Returns (packed (R, d*b/8),
+    scale (R, 1) f32, m_new (R, d) f32)."""
+    delta = a.astype(jnp.float32) - m.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(delta), axis=-1, keepdims=True),
+                        _EPS)
+    levels = (1 << bits) - 1
+    y = jnp.clip((delta / scale + 1.0) * (0.5 * levels), 0.0, levels)
+    codes = jnp.round(y).astype(jnp.uint8)
+    k = 8 // bits
+    r, d = codes.shape
+    grouped = codes.reshape(r, d // k, k).astype(jnp.uint32)
+    shifts = jnp.arange(k, dtype=jnp.uint32) * bits
+    packed = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    deq = (codes.astype(jnp.float32) * (2.0 / levels) - 1.0) * scale
+    m_new = m.astype(jnp.float32) + deq
+    return packed, scale, m_new
+
+
+def dequant_unpack_accumulate_ref(packed, scale, m, bits: int):
+    """AQ-SGD receiver side: unpack -> dequantize -> m += delta.
+    packed: (R, d*b/8) u8; scale (R, 1); m (R, d).  Returns m_new f32."""
+    k = 8 // bits
+    levels = (1 << bits) - 1
+    shifts = jnp.arange(k, dtype=jnp.uint32) * bits
+    mask = jnp.uint32(levels)
+    vals = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    r = packed.shape[0]
+    codes = vals.reshape(r, -1)
+    deq = (codes.astype(jnp.float32) * (2.0 / levels) - 1.0) * scale
+    return m.astype(jnp.float32) + deq
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=10 ** 9,
+                        softcap=0.0):
+    """Dense attention oracle.  q,k,v: (B, H, S, hd) (head-major)."""
+    b, h, s, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(s)
+    vis = jnp.ones((s, s), bool)
+    if causal:
+        vis &= pos[None, :] <= pos[:, None]
+    vis &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(vis, logits, -1e9)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

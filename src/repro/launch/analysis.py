@@ -1,0 +1,167 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms, per device (TPU v5e targets):
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis`` supplies FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD optimized HLO and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (shapes in the partitioned module are per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass
+from typing import Optional
+
+# -- TPU v5e hardware constants (per chip) ----------------------------------
+PEAK_FLOPS = 197e12            # bf16
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[8,128,4096]' -> bytes; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dtype])
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVE_KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # format: %name = TYPE kind(operands...), ...
+        m = re.match(r"%?[\w.\-]+ = (.*?) (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = None
+        for k in _COLLECTIVE_KINDS:
+            if op == k or op.startswith(k + "-"):  # e.g. all-gather-start
+                kind = k
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue                       # avoid double-counting async pairs
+        # payload ~ result size for gather-style; operand size for others —
+        # use the max of result and first-operand bytes as the wire payload.
+        res_b = _shape_bytes(result_type)
+        out[kind] += res_b
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict
+    memory_per_device: float           # HBM footprint (args+temps)
+    model_flops: float                 # analytic 6·N·D (global)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+
+    def finalize(self):
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.coll_bytes_per_device / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_flops = self.flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops / total_flops
+                             if total_flops else 0.0)
+        return self
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                     chips: int, model_flops: float) -> Roofline:
+    """Roofline terms via the loop-aware HLO parser (hlo_cost); XLA's own
+    cost_analysis is kept as `xla_*` cross-check fields (it counts while
+    bodies once, so it underestimates scanned programs)."""
+    from repro.launch import hlo_cost as H
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = H.hlo_cost(hlo)
+    mem = (getattr(ma, "argument_size_in_bytes", 0)
+           + getattr(ma, "temp_size_in_bytes", 0)
+           + getattr(ma, "output_size_in_bytes", 0))
+    breakdown = {k: int(v) for k, v in cost.coll.items()}
+    breakdown["xla_flops"] = float(ca.get("flops", 0.0))
+    breakdown["xla_bytes"] = float(ca.get("bytes accessed", 0.0))
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        flops_per_device=float(cost.flops),
+        bytes_per_device=float(cost.bytes),
+        coll_bytes_per_device=float(cost.coll_bytes),
+        coll_breakdown=breakdown,
+        memory_per_device=float(mem),
+        model_flops=float(model_flops),
+    ).finalize()
+
+
+def model_flops_estimate(cfg, shape_kind: str, global_batch: int,
+                         seq_len: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for
+    inference (D = processed tokens)."""
+    n_active = cfg.active_params_count()
+    if shape_kind == "train":
+        tokens = global_batch * seq_len
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = global_batch * seq_len
+        return 2.0 * n_active * tokens
+    tokens = global_batch * 1          # decode: one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def save_results(path: str, rows: list):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() if isinstance(r, Roofline) else r
+                   for r in rows], f, indent=1)
+
+
+def load_results(path: str) -> list:
+    with open(path) as f:
+        return json.load(f)

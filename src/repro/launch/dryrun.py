@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this builds the *real* distributed program —
+the shard_map GPipe pipeline with AQ-SGD-compressed boundaries for
+train_4k, the pjit-sharded prefill/serve steps for the inference
+shapes — entirely from ShapeDtypeStructs (no allocation), compiles it for
+the production mesh, and records:
+
+  * memory_analysis()  — proves the program fits 16 GB/chip HBM,
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline,
+  * collective bytes   — parsed from the optimized HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCHS, INPUT_SHAPES, ModelConfig,
+                                get_config, shape_applies)
+from repro.core.aqsgd import CompressionConfig
+from repro.launch import analysis
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import model as Mo
+from repro.optim.adamw import AdamWConfig
+from repro.serving import decode as Sv
+from repro.training import pipeline as PL
+
+
+def _bf16_structs(tree):
+    def cast(s):
+        dt = jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) \
+            else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return jax.tree.map(cast, tree)
+
+
+def input_specs(cfg: ModelConfig, shape, *, for_decode: bool):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = shape.global_batch
+    if for_decode:
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        extras = {}
+    else:
+        n_text = shape.seq_len - (cfg.num_patches or 0)
+        tokens = jax.ShapeDtypeStruct((b, n_text), jnp.int32)
+        extras = {}
+        if cfg.family == "vlm":
+            extras["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            extras["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return tokens, extras
+
+
+def lower_serving(cfg: ModelConfig, mesh, shape, *, prefill: bool):
+    params_shape = _bf16_structs(jax.eval_shape(
+        lambda: Mo.init_params(cfg, jax.random.PRNGKey(0))))
+    cache_shape = jax.eval_shape(
+        lambda: Mo.init_caches(cfg, shape.global_batch, shape.seq_len,
+                               jnp.bfloat16))
+    tokens, extras = input_specs(cfg, shape, for_decode=not prefill)
+    ps = Sv.param_shardings(cfg, mesh, params_shape)
+    cs = Sv.cache_shardings(cfg, mesh, cache_shape)
+    ts = Sv.batch_sharding(mesh, tokens.shape)
+    ex_sh = {k: Sv.batch_sharding(mesh, v.shape) for k, v in extras.items()}
+    logits_s = Sv.logits_sharding(cfg, mesh)
+
+    def fn(params, caches, tokens, extras):
+        return Mo.forward_with_caches(
+            params, cfg, tokens, caches, logits_last_only=True, **extras)
+
+    jitted = jax.jit(fn, in_shardings=(ps, cs, ts, ex_sh),
+                     out_shardings=(logits_s, cs),
+                     donate_argnums=(1,))       # cache updated in place
+    return jitted.lower(params_shape, cache_shape, tokens, extras)
+
+
+def lower_train(cfg: ModelConfig, mesh, shape, *,
+                compression: str = "aqsgd", fw_bits: int = 4,
+                bw_bits: int = 8, microbatches: int = 0,
+                moe_mode: str = "zero3", opt_state_bits: int = 0,
+                buffer_bits: int = 0):
+    daxes = data_axes(mesh)
+    d_repl = 1
+    for a in daxes:
+        d_repl *= mesh.shape[a]
+    br = shape.global_batch // d_repl
+    m = microbatches or br             # default microbatch size 1
+    pcfg = PL.PipelineConfig(
+        microbatches=m, moe_mode=moe_mode, buffer_bits=buffer_bits,
+        compression=CompressionConfig(mode=compression, fw_bits=fw_bits,
+                                      bw_bits=bw_bits))
+    step, meta = PL.make_train_step(
+        cfg, pcfg, mesh, AdamWConfig(state_bits=opt_state_bits),
+        global_batch=shape.global_batch,
+        seq_len=shape.seq_len, buffer_samples=br)
+    state, batch, key = PL.make_state_structs(
+        cfg, pcfg, meta, mesh, global_batch=shape.global_batch,
+        seq_len=shape.seq_len, opt_state_bits=opt_state_bits)
+    return step.lower(state, batch, key)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               compression: str = "aqsgd", microbatches: int = 0,
+               verbose: bool = True, dump_hlo: str = "",
+               moe_mode: str = "zero3", opt_state_bits: int = 0,
+               buffer_bits: int = 0):
+    cfg = get_config(arch).with_(dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    shape = INPUT_SHAPES[shape_name]
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = lower_train(cfg, mesh, shape, compression=compression,
+                              microbatches=microbatches, moe_mode=moe_mode,
+                              opt_state_bits=opt_state_bits,
+                              buffer_bits=buffer_bits)
+    else:
+        lowered = lower_serving(cfg, mesh, shape,
+                                prefill=(shape.kind == "prefill"))
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mf = analysis.model_flops_estimate(cfg, shape.kind, shape.global_batch,
+                                       shape.seq_len)
+    roof = analysis.analyze_compiled(
+        compiled, arch=arch, shape=shape_name,
+        mesh_desc="2x16x16" if multi_pod else "16x16", chips=chips,
+        model_flops=mf)
+    ma = compiled.memory_analysis()
+    if verbose:
+        print(f"--- {arch} × {shape_name} × {roof.mesh} "
+              f"(lower {t1-t0:.1f}s compile {t2-t1:.1f}s)")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/1e9:.2f}GB"
+              f" temps={ma.temp_size_in_bytes/1e9:.2f}GB"
+              f" out={ma.output_size_in_bytes/1e9:.2f}GB per device")
+        print(f"  cost_analysis:   flops/dev={roof.flops_per_device:.3e}"
+              f" bytes/dev={roof.bytes_per_device:.3e}")
+        print(f"  collectives/dev: {roof.coll_bytes_per_device:.3e} B "
+              f"{ {k: int(v) for k, v in roof.coll_breakdown.items() if v} }")
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms"
+              f" memory={roof.memory_s*1e3:.2f}ms"
+              f" collective={roof.collective_s*1e3:.2f}ms"
+              f" -> {roof.bottleneck}-bound"
+              f" useful={roof.useful_ratio:.2f}")
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(compiled.as_text())
+    d = roof.to_dict()
+    d["hbm_args_gb"] = ma.argument_size_in_bytes / 1e9
+    d["hbm_temps_gb"] = ma.temp_size_in_bytes / 1e9
+    d["lower_s"] = t1 - t0
+    d["compile_s"] = t2 - t1
+    d["compression"] = compression if shape.kind == "train" else "n/a"
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--compression", default="aqsgd",
+                    choices=["fp32", "directq", "aqsgd"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--moe-mode", default="zero3",
+                    choices=["zero3", "expert_parallel"])
+    ap.add_argument("--opt-state-bits", type=int, default=0)
+    ap.add_argument("--buffer-bits", type=int, default=0)
+    ap.add_argument("--out", default="")
+    ap.add_argument("--dump-hlo", default="")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for arch in ARCHS:
+            if arch == "gpt2-xl-paper":
+                continue               # the paper's own arch: use --arch
+            for sh in INPUT_SHAPES:
+                combos.append((arch, sh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    rows, failures = [], []
+    for arch, sh in combos:
+        if not shape_applies(arch, sh):
+            print(f"--- {arch} × {sh}: SKIP (see DESIGN.md §5)")
+            rows.append({"arch": arch, "shape": sh, "skip": True})
+            continue
+        try:
+            rows.append(dryrun_one(
+                arch, sh, multi_pod=args.multi_pod,
+                compression=args.compression,
+                microbatches=args.microbatches, dump_hlo=args.dump_hlo,
+                moe_mode=args.moe_mode,
+                opt_state_bits=args.opt_state_bits,
+                buffer_bits=args.buffer_bits))
+        except Exception as e:          # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, sh, str(e)[:300]))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print("wrote", args.out)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print(f"DRYRUN OK ({len(rows)} combos)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""Loop-aware cost accounting over optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+useless for scan-heavy programs (our pipelines run 31-tick × per-layer
+scans, so it undercounts ~100×).  Fortunately the optimized HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on every while, so we
+re-derive the three roofline inputs ourselves, exactly:
+
+  flops      — 2·prod(result)·prod(contraction) per ``dot``, multiplied
+               through enclosing while trip counts (recursing through
+               fusions / calls / conditionals);
+  bytes      — HBM traffic model: operand+result bytes of every
+               *top-level* op (fusion interiors excluded — that is what
+               fusion means), × trip counts;
+  collective — operand/result bytes per collective kind, × trip counts.
+
+Conditionals take the MAX across branches (a static analysis cannot know
+branch frequencies; for zamba2's shared-attention flags this overcounts
+the attention term — EXPERIMENTS.md notes the correction).
+
+Validated against fully-unrolled compiles of reduced configs in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "reshape"}
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)   # name -> result type str
+
+
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_OPCALL = re.compile(r"([a-z][a-z0-9\-]*)\(")
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", s)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    comps["__entry__"] = cur
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        name = lhs.replace("ROOT", "").strip().lstrip("%")
+        m = _OPCALL.search(rhs)
+        if not m:
+            continue
+        rtype = rhs[:m.start()].strip()
+        op = m.group(1)
+        rest = rhs[m.end():]
+        # operand names: inside the op's top-level parens
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        opers = _OPERAND.findall(rest[:end])
+        instr = Instr(name, rtype, op, opers, s)
+        cur.instrs.append(instr)
+        cur.types[name] = rtype
+    return comps
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TO_RE = re.compile(r"to=%?([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    res = _shape_dims(instr.result_type)
+    m = _CDIMS_RE.search(instr.line)
+    lhs_type = comp.types.get(instr.operands[0], "")
+    lhs = _shape_dims(lhs_type)
+    cdims = [int(d) for d in m.group(1).split(",") if d] if m else []
+    k = 1
+    for d in cdims:
+        if d < len(lhs):
+            k *= lhs[d]
+    n = 1
+    for d in res:
+        n *= d
+    return 2.0 * n * k
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {k: 0.0 for k in _COLLECTIVES}
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _cost_of(comp: Computation, comps: dict, cache: dict,
+             inside_fusion: bool) -> Cost:
+    ck = (comp.name, inside_fusion)
+    if ck in cache:
+        return cache[ck]
+    total = Cost()
+    for ins in comp.instrs:
+        op = ins.op
+        if op == "dot":
+            total.flops += _dot_flops(ins, comp)
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.result_type) + sum(
+                    _type_bytes(comp.types.get(o, "")) for o in ins.operands)
+            continue
+        if op == "fusion":
+            m = _CALLS_RE.search(ins.line)
+            if m and m.group(1) in comps:
+                total.add(_cost_of(comps[m.group(1)], comps, cache, True))
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.result_type) + sum(
+                    _type_bytes(comp.types.get(o, "")) for o in ins.operands)
+            continue
+        if op == "while":
+            m = _BODY_RE.search(ins.line)
+            trip = 1
+            tm = _TRIP_RE.search(ins.line)
+            if tm:
+                trip = int(tm.group(1))
+            if m and m.group(1) in comps:
+                total.add(_cost_of(comps[m.group(1)], comps, cache,
+                                   inside_fusion), trip)
+            continue
+        if op == "conditional":
+            m = _BRANCHES_RE.search(ins.line)
+            if m:
+                branch_costs = []
+                for bn in _OPERAND.findall(m.group(1)):
+                    if bn in comps:
+                        branch_costs.append(
+                            _cost_of(comps[bn], comps, cache,
+                                     inside_fusion))
+                if branch_costs:
+                    # max across branches (see module docstring)
+                    best = max(branch_costs,
+                               key=lambda c: (c.flops, c.bytes))
+                    total.add(best)
+            continue
+        if op in ("call", "async-start"):
+            m = _TO_RE.search(ins.line) or _CALLS_RE.search(ins.line)
+            if m and m.group(1) in comps:
+                total.add(_cost_of(comps[m.group(1)], comps, cache,
+                                   inside_fusion))
+            continue
+        is_coll = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                is_coll = c
+                break
+        if is_coll:
+            total.coll[is_coll] += _type_bytes(ins.result_type)
+            if not inside_fusion:
+                total.bytes += _type_bytes(ins.result_type)
+            continue
+        if op.endswith("-done") or op in _FREE_OPS:
+            continue
+        # generic elementwise / data movement op at top level
+        if not inside_fusion:
+            total.bytes += _type_bytes(ins.result_type) + sum(
+                _type_bytes(comp.types.get(o, "")) for o in ins.operands)
+    cache[ck] = total
+    return total
+
+
+def hlo_cost(text: str) -> Cost:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return _cost_of(entry, comps, {}, False)

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax device query.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for in-container multi-device tests (8 host devices)."""
+    return _mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry data parallelism ('pod' folds into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name) -> int:
+    return mesh.shape[name]

@@ -1,0 +1,40 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the
+dryrun JSON artifacts.
+
+Usage: python -m repro.launch.report results/dryrun_singlepod.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_row(r) -> str:
+    if r.get("skip"):
+        return (f"| {r['arch']} | {r['shape']} | — | SKIP (DESIGN.md §5) "
+                f"| | | | | | |")
+    c, m, co = r["compute_s"], r["memory_s"], r["collective_s"]
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {r['coll_bytes_per_device']:.2e} "
+            f"| {c*1e3:.0f} / {m*1e3:.0f} / {co*1e3:.0f} "
+            f"| **{r['bottleneck']}** | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_args_gb'] + r['hbm_temps_gb']:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | FLOPs/dev | bytes/dev | coll B/dev "
+          "| comp/mem/coll (ms) | bottleneck | useful | HBM GB |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    for path in sys.argv[1:]:
+        rows = json.load(open(path))
+        print(f"\n### {path}\n")
+        print(HEADER)
+        for r in rows:
+            print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

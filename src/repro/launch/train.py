@@ -1,0 +1,124 @@
+"""Training launcher.
+
+Single-host execution drives the bit-faithful simulated pipeline (the
+science path); passing --distributed uses the shard_map GPipe pipeline on
+whatever devices exist (set XLA_FLAGS=--xla_force_host_platform_device_count=N
+for CPU experiments; on TPU pods it runs as-is).
+
+Examples:
+  python -m repro.launch.train --arch gpt2-xl-paper --smoke \\
+      --mode aqsgd --fw-bits 4 --bw-bits 8 --steps 100
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  python -m repro.launch.train --arch gemma2-9b --smoke --distributed \\
+      --data-par 4 --stages 2 --steps 10
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-xl-paper")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--mode", default="aqsgd",
+                    choices=["fp32", "directq", "aqsgd"])
+    ap.add_argument("--fw-bits", type=int, default=4)
+    ap.add_argument("--bw-bits", type=int, default=8)
+    ap.add_argument("--buffer-bits", type=int, default=0)
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--samples", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup-epochs", type=int, default=1)
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--data-par", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--corpus", default="",
+                    help="optional text file to train on (byte-level)")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.core.aqsgd import CompressionConfig
+    from repro.data.pipeline import Dataset, DatasetConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.checkpoint import checkpoint as ckpt
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    cc = CompressionConfig(mode=args.mode, fw_bits=args.fw_bits,
+                           bw_bits=args.bw_bits,
+                           buffer_bits=args.buffer_bits)
+    dc = DatasetConfig(num_samples=args.samples, seq_len=args.seq,
+                       vocab_size=cfg.vocab_size,
+                       kind="textfile" if args.corpus else "synthetic-lm",
+                       path=args.corpus or None)
+    ds = Dataset(dc)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps)
+
+    if not args.distributed:
+        from repro.training import simulated as sim
+        tcfg = sim.SimTrainConfig(num_stages=args.stages, compression=cc,
+                                  optimizer=opt)
+        state, losses = sim.train(cfg, tcfg, ds, num_steps=args.steps,
+                                  batch_size=args.batch, log_every=10)
+        print(f"final loss {np.mean(losses[-5:]):.4f}")
+        if args.checkpoint:
+            ckpt.save(args.checkpoint, state["params"])
+            print("saved", args.checkpoint)
+        return
+
+    # ---- distributed shard_map pipeline ------------------------------------
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import model as Mo
+    from repro.optim import adamw
+    from repro.training import pipeline as PL
+
+    mesh = make_debug_mesh(args.data_par, args.stages)
+    pcfg = PL.PipelineConfig(microbatches=args.microbatches,
+                             compression=cc, warmup=True)
+    gb = args.batch
+    step_w, meta = PL.make_train_step(cfg, pcfg, mesh, opt,
+                                      global_batch=gb, seq_len=args.seq,
+                                      buffer_samples=args.samples
+                                      // args.data_par)
+    pcfg2 = PL.PipelineConfig(microbatches=args.microbatches,
+                              compression=cc, warmup=False)
+    step_c, _ = PL.make_train_step(cfg, pcfg2, mesh, opt,
+                                   global_batch=gb, seq_len=args.seq,
+                                   buffer_samples=args.samples
+                                   // args.data_par)
+    params = PL.to_pipeline_params(
+        cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), args.stages)
+    state = {"params": params, "opt": adamw.init_opt_state(params)}
+    if cc.mode == "aqsgd":
+        n_loc = args.samples // args.data_par
+        bshape = (args.stages, args.data_par * n_loc, args.seq, cfg.d_model)
+        state["m_out"] = jnp.zeros(bshape, jnp.bfloat16)
+        state["m_in"] = jnp.zeros(bshape, jnp.bfloat16)
+
+    m = args.microbatches
+    steps_per_epoch = max(args.samples // gb, 1)
+    key = jax.random.PRNGKey(1)
+    for step_i, batch in enumerate(ds.batches(gb, args.steps)):
+        batch = {k: jnp.asarray(v).reshape(m, gb // m, *v.shape[1:])
+                 for k, v in batch.items()}
+        fn = step_w if (cc.mode == "aqsgd"
+                        and step_i < steps_per_epoch
+                        * args.warmup_epochs) else step_c
+        state, metrics = fn(state, batch, jax.random.fold_in(key, step_i))
+        if step_i % 10 == 0:
+            print(f"step {step_i:5d} loss {float(metrics['loss']):.4f}")
+    print(f"final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

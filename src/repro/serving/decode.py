@@ -1,0 +1,149 @@
+"""pjit serving: sharded prefill / single-token decode.
+
+Decode shapes (decode_32k, long_500k) lower ``serve_step`` — one new
+token against a KV/SSM cache of ``seq_len`` — under 2-D GSPMD sharding:
+
+* weights: last dim over ``model``, second-to-last over ``data`` where
+  divisible (fully-sharded weights so ≥70 GB models fit 16 GB/chip);
+* caches: batch over the data axes when divisible, else the cache
+  sequence dim; sequence or heads over ``model``;
+* ``pod`` folds into data parallelism.
+
+GSPMD propagates interior shardings and inserts the collectives; the
+dry-run reads them back out of the lowered HLO for §Roofline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+from repro.models import model as Mo
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def _axis_sizes(mesh, axes):
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def leaf_spec(mesh, shape, *, skip_leading: int = 0) -> P:
+    """Generic 2-D weight rule: last dim -> model, previous dim -> data."""
+    daxes = data_axes(mesh)
+    dsize = _axis_sizes(mesh, daxes)
+    msize = mesh.shape["model"]
+    spec: list = [None] * len(shape)
+    dims = [i for i in range(len(shape)) if i >= skip_leading]
+    if dims and shape[dims[-1]] % msize == 0:
+        spec[dims[-1]] = "model"
+    if len(dims) > 1 and shape[dims[-2]] % dsize == 0:
+        spec[dims[-2]] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh, params_shape) -> Any:
+    """Shardings for a params pytree (ShapeDtypeStructs or arrays)."""
+    def rule(leaf):
+        # stacked layer leaves have a leading layer dim; detect by ndim>=2
+        # and first-dim == num_layers-ish — simpler: never shard dim 0 of
+        # 3D+ leaves (it is the stack dim), shard last two dims.
+        skip = 1 if leaf.ndim >= 3 else 0
+        return NamedSharding(mesh, leaf_spec(mesh, leaf.shape,
+                                             skip_leading=skip))
+    return jax.tree.map(rule, params_shape)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_shape) -> Any:
+    daxes = data_axes(mesh)
+    dsize = _axis_sizes(mesh, daxes)
+    msize = mesh.shape["model"]
+    d = daxes if len(daxes) > 1 else daxes[0]
+
+    def rule(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        shape = leaf.shape
+        if name in ("k", "v", "pk", "pv", "xk", "xv"):
+            # (L, B, S, Hk, hd)
+            spec = [None] * 5
+            if shape[1] % dsize == 0:
+                spec[1] = d
+                spec[2] = "model" if shape[2] % msize == 0 else None
+            elif shape[2] % (dsize * msize) == 0:
+                spec[2] = (*daxes, "model")
+            elif shape[2] % msize == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name == "ssm":
+            spec = [None] * 5
+            if shape[1] % dsize == 0:
+                spec[1] = d
+            if shape[2] % msize == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name == "conv":
+            spec = [None] * 4
+            if shape[1] % dsize == 0:
+                spec[1] = d
+            if shape[3] % msize == 0:
+                spec[3] = "model"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def batch_sharding(mesh, shape) -> NamedSharding:
+    """Tokens / patches / frames: batch over data axes when divisible."""
+    daxes = data_axes(mesh)
+    dsize = _axis_sizes(mesh, daxes)
+    spec = [None] * len(shape)
+    if shape[0] % dsize == 0:
+        spec[0] = daxes if len(daxes) > 1 else daxes[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# serve step
+# ---------------------------------------------------------------------------
+
+def serve_step(params, caches, tokens, *, cfg: ModelConfig,
+               block_k: int = 512):
+    """One decode step: (B, 1) token -> (B, 1, V) logits + new caches."""
+    logits, new_caches = Mo.forward_with_caches(
+        params, cfg, tokens, caches, block_k=block_k)
+    return logits, new_caches
+
+
+def prefill_step(params, caches, tokens, *, cfg: ModelConfig,
+                 patches=None, frames=None, block_k: int = 512):
+    logits, new_caches = Mo.forward_with_caches(
+        params, cfg, tokens, caches, patches=patches, frames=frames,
+        block_k=block_k)
+    return logits, new_caches
+
+
+def logits_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
+    spec = P(None, None, "model") \
+        if cfg.vocab_size % mesh.shape["model"] == 0 else P()
+    return NamedSharding(mesh, spec)
+
+
+def jit_serve_step(cfg: ModelConfig, mesh, params_shape, cache_shape,
+                   token_shape, donate: bool = True):
+    ps = param_shardings(cfg, mesh, params_shape)
+    cs = cache_shardings(cfg, mesh, cache_shape)
+    ts = batch_sharding(mesh, token_shape.shape)
+    logits_s = logits_sharding(cfg, mesh)
+    fn = functools.partial(serve_step, cfg=cfg)
+    return jax.jit(fn, in_shardings=(ps, cs, ts),
+                   out_shardings=(logits_s, cs),
+                   donate_argnums=(1,) if donate else ())

@@ -1,0 +1,172 @@
+"""Bit-faithful single-process simulation of AQ-SGD pipeline training.
+
+Mathematically identical to the K-machine distributed algorithm
+(Algorithm 2): the model trunk is cut into K stages; at each of the K-1
+boundaries the activation is replaced by the message m(ξ) (full precision
+on first visit, += Q(Δ) afterwards) and the backward activation gradient
+is quantized — exactly what the wire carries.  Because the simulation and
+the distributed runtime share `core.aqsgd.apply_boundary`, convergence
+results measured here transfer to the shard_map pipeline bit-for-bit
+(up to collective reduction order).
+
+This is the engine behind the paper-validation benchmarks (Fig. 1a/3/5/9).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import aqsgd
+from repro.core import grad_compress
+from repro.core.aqsgd import CompressionConfig
+from repro.models import model as Mo
+from repro.optim import adamw
+
+
+@dataclass(frozen=True)
+class SimTrainConfig:
+    num_stages: int = 4
+    compression: CompressionConfig = field(default_factory=CompressionConfig)
+    optimizer: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+    # Fig. 5: error-feedback compression of model gradients on the DP axis
+    dp_grad_bits: int = 0           # 0 = off
+    dp_workers: int = 1             # simulated DP degree when dp_grad_bits>0
+    remat: bool = False
+
+
+def init_train_state(mcfg: ModelConfig, tcfg: SimTrainConfig,
+                     num_samples: int, seq_len: int, key) -> dict:
+    params = Mo.init_params(mcfg, key)
+    state = {
+        "params": params,
+        "opt": adamw.init_opt_state(params),
+        "buffers": aqsgd.init_buffers(
+            tcfg.compression, tcfg.num_stages - 1, num_samples, seq_len,
+            mcfg.d_model),
+    }
+    if tcfg.dp_grad_bits:
+        state["dp_error"] = [grad_compress.init_error_state(params)
+                             for _ in range(tcfg.dp_workers)]
+    return state
+
+
+def _loss_with_boundaries(params, mcfg, tcfg, batch, m_all, seen_all, key):
+    cc = tcfg.compression
+    nb = tcfg.num_stages - 1
+
+    def boundary_fn(bstate, h, idx):
+        kb = jax.random.fold_in(key, idx)
+        m = m_all[idx] if m_all is not None else None
+        seen = seen_all[idx] if seen_all is not None else None
+        h2, m_new = aqsgd.apply_boundary(cc, h, kb, m, seen)
+        return bstate + (m_new,), h2
+
+    loss, metrics = Mo.loss_fn(
+        params, mcfg, batch, num_stages=tcfg.num_stages,
+        boundary_fn=boundary_fn, boundary_state=(), remat=tcfg.remat)
+    return loss, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("mcfg", "tcfg"))
+def train_step(state, batch, key, *, mcfg: ModelConfig,
+               tcfg: SimTrainConfig):
+    """One AQ-SGD training step.  batch must include sample_ids."""
+    cc = tcfg.compression
+    bufs = state["buffers"]
+    ids = batch["sample_ids"]
+    if cc.mode == "aqsgd":
+        m_all = [aqsgd.read_buffer(cc, bufs, i, ids, mcfg.d_model)
+                 for i in range(tcfg.num_stages - 1)]
+        seen_all = [bufs["seen"][i][ids] for i in range(tcfg.num_stages - 1)]
+    else:
+        m_all = seen_all = None
+
+    grad_fn = jax.value_and_grad(
+        lambda p: _loss_with_boundaries(p, mcfg, tcfg, batch, m_all,
+                                        seen_all, key), has_aux=True)
+
+    if tcfg.dp_grad_bits and tcfg.dp_workers > 1:
+        # Fig. 5 mode: split the batch over simulated DP workers, compress
+        # each worker's model gradient with error feedback, average.
+        w = tcfg.dp_workers
+        b = batch["tokens"].shape[0] // w
+        gsum, loss = None, 0.0
+        new_err, new_ms_parts, ce = [], [], 0.0
+        for i in range(w):
+            sub = {k: v[i * b:(i + 1) * b] for k, v in batch.items()}
+            sub_m = [m[:, i * b:(i + 1) * b] if m.ndim > 3 else
+                     m[i * b:(i + 1) * b] for m in m_all] if m_all else None
+            sub_s = [s[i * b:(i + 1) * b] for s in seen_all] \
+                if seen_all else None
+            (l, met), g = jax.value_and_grad(
+                lambda p: _loss_with_boundaries(
+                    p, mcfg, tcfg, sub, sub_m, sub_s,
+                    jax.random.fold_in(key, 1000 + i)), has_aux=True)(
+                        state["params"])
+            gq, ne = grad_compress.compress_gradients(
+                g, state["dp_error"][i], tcfg.dp_grad_bits,
+                jax.random.fold_in(key, 2000 + i))
+            new_err.append(ne)
+            gsum = gq if gsum is None else jax.tree.map(jnp.add, gsum, gq)
+            loss = loss + l / w
+            ce = ce + met["ce"] / w
+            new_ms_parts.append(met["boundary_state"])
+        grads = jax.tree.map(lambda x: x / w, gsum)
+        new_state_extra = {"dp_error": new_err}
+        if cc.mode == "aqsgd":
+            # workers own disjoint batch shards; concat their new messages
+            nb = tcfg.num_stages - 1
+            bstate = tuple(
+                jnp.concatenate([new_ms_parts[i][j] for i in range(w)],
+                                axis=0) for j in range(nb))
+        else:
+            bstate = ()
+        metrics = {"ce": ce, "aux": 0.0, "boundary_state": bstate}
+    else:
+        (loss, metrics), grads = grad_fn(state["params"])
+        new_state_extra = {}
+
+    params, opt = adamw.apply_updates(
+        tcfg.optimizer, state["params"], grads, state["opt"])
+
+    if cc.mode == "aqsgd":
+        new_ms = metrics.pop("boundary_state")
+        for i, m_new in enumerate(new_ms):
+            bufs = aqsgd.write_buffer(cc, bufs, i, ids, m_new)
+    else:
+        metrics.pop("boundary_state", None)
+
+    new_state = {"params": params, "opt": opt, "buffers": bufs,
+                 **new_state_extra}
+    metrics = {"loss": loss, "ce": metrics["ce"], "aux": metrics["aux"]}
+    return new_state, metrics
+
+
+def train(mcfg: ModelConfig, tcfg: SimTrainConfig, dataset, *,
+          num_steps: int, batch_size: int, key=None, log_every: int = 0,
+          initial_params=None):
+    """Run the simulated trainer; returns (state, list of per-step loss).
+
+    initial_params: start from a pre-trained checkpoint (the paper's
+    fine-tuning setting) instead of random init."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k_init, k_run = jax.random.split(key)
+    state = init_train_state(mcfg, tcfg, dataset.num_samples,
+                             dataset.dc.seq_len, k_init)
+    if initial_params is not None:
+        state["params"] = initial_params
+    losses = []
+    for step, batch in enumerate(dataset.batches(batch_size, num_steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = train_step(state, batch,
+                                    jax.random.fold_in(k_run, step),
+                                    mcfg=mcfg, tcfg=tcfg)
+        losses.append(float(metrics["loss"]))
+        if log_every and step % log_every == 0:
+            print(f"step {step:5d} loss {losses[-1]:.4f}")
+    return state, losses

@@ -1,0 +1,104 @@
+"""Unit + property tests for the uniform quantizer and wire packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_roundtrip_error_bound(bits, stochastic):
+    x = jax.random.normal(KEY, (16, 256), dtype=jnp.float32)
+    codes, scale = q.quantize(x, bits, stochastic=stochastic, key=KEY)
+    xh = q.dequantize(codes, scale, bits)
+    # uniform grid over [-scale, scale]: max error = half a cell for
+    # deterministic rounding, one cell for stochastic.
+    cell = 2.0 * np.asarray(scale) / ((1 << bits) - 1)
+    err = np.abs(np.asarray(xh - x))
+    factor = 1.0 if stochastic else 0.5
+    assert np.all(err <= factor * cell + 1e-6)
+
+
+def test_stochastic_rounding_unbiased():
+    # E[Q(x)] = x: average many independent stochastic quantizations.
+    x = jax.random.uniform(KEY, (64,), minval=-1, maxval=1)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4096)
+    qd = jax.vmap(lambda k: q.qdq(x, 2, key=k))(keys)
+    mean = np.asarray(qd.mean(axis=0))
+    assert np.allclose(mean, np.asarray(x), atol=0.02)
+
+
+def test_relative_error_contraction():
+    # the theory's requirement E||x - Q(x)|| <= c_Q ||x|| with c_Q < sqrt(1/2)
+    # holds comfortably at >=4 bits for per-row scales on gaussian data.
+    x = jax.random.normal(KEY, (32, 512))
+    keys = jax.random.split(jax.random.PRNGKey(2), 64)
+    errs = []
+    for k in keys[:8]:
+        xh = q.qdq(x, 4, key=k)
+        errs.append(np.linalg.norm(np.asarray(xh - x)) /
+                    np.linalg.norm(np.asarray(x)))
+    assert np.mean(errs) < np.sqrt(0.5)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("n", [1, 3, 8, 127, 256])
+def test_pack_unpack_roundtrip(bits, n):
+    maxc = (1 << bits) - 1
+    codes = jax.random.randint(KEY, (4, n), 0, maxc + 1, dtype=jnp.int32)
+    codes = codes.astype(jnp.uint8)
+    packed = q.pack_codes(codes, bits)
+    assert packed.shape == (4, q.packed_width(n, bits))
+    out = q.unpack_codes(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_wire_bytes():
+    # 2-bit packing of a (8, 100) tensor: 25 bytes/row + 4-byte scale.
+    assert q.wire_bytes((8, 100), 2) == 8 * 25 + 8 * 4
+    assert q.wire_bytes((8, 100), 8) == 8 * 100 + 8 * 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    rows=st.integers(1, 5),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_wire_roundtrip_equals_qdq(bits, rows, n, seed):
+    """Wire form (quantize→pack→unpack→dequantize) == fake-quant qdq."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, n), dtype=jnp.float32) * 3.0
+    codes, scale = q.quantize(x, bits, stochastic=False)
+    wire = q.pack_codes(codes, bits)
+    xh_wire = q.dequantize(q.unpack_codes(wire, bits, n), scale, bits)
+    xh_sim = q.qdq(x, bits, stochastic=False)
+    np.testing.assert_allclose(np.asarray(xh_wire), np.asarray(xh_sim),
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    scale_pow=st.integers(-3, 3),
+)
+def test_property_quantize_within_grid(bits, seed, scale_pow):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4, 64)) * (10.0 ** scale_pow)
+    codes, _ = q.quantize(x, bits, stochastic=True, key=key)
+    assert int(jnp.max(codes)) <= (1 << bits) - 1
+
+
+def test_zero_input_safe():
+    x = jnp.zeros((4, 16))
+    out = q.qdq(x, 2, stochastic=False)
+    assert not np.any(np.isnan(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-9)

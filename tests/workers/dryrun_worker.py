@@ -1,0 +1,72 @@
+"""Subprocess worker: reduced-config dry-run on a small in-container mesh.
+
+Proves the full launch path (lower -> compile -> memory/cost analysis ->
+roofline extraction) end-to-end without 512 fake devices.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, InputShape
+from repro.core.aqsgd import CompressionConfig
+from repro.launch import analysis
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as Mo
+from repro.optim.adamw import AdamWConfig
+from repro.serving import decode as Sv
+from repro.training import pipeline as PL
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def main():
+    mesh = make_debug_mesh(4, 2)
+    shape = InputShape("smoke_train", 64, 8, "train")
+    for arch in ["gemma2-9b", "deepseek-moe-16b", "mamba2-1.3b"]:
+        cfg = get_config(arch, smoke=True)
+        n_scan = cfg.num_layers - cfg.first_dense_layers
+        if n_scan % 2:
+            cfg = cfg.with_(num_layers=cfg.num_layers + 1)
+        pcfg = PL.PipelineConfig(
+            microbatches=2, compression=CompressionConfig(mode="aqsgd"))
+        step, meta = PL.make_train_step(
+            cfg, pcfg, mesh, AdamWConfig(), global_batch=shape.global_batch,
+            seq_len=shape.seq_len, buffer_samples=2)
+        state, batch, key = PL.make_state_structs(
+            cfg, pcfg, meta, mesh, global_batch=shape.global_batch,
+            seq_len=shape.seq_len)
+        compiled = step.lower(state, batch, key).compile()
+        roof = analysis.analyze_compiled(
+            compiled, arch=arch, shape="smoke_train", mesh_desc="4x2",
+            chips=8, model_flops=analysis.model_flops_estimate(
+                cfg, "train", shape.global_batch, shape.seq_len))
+        assert roof.flops_per_device > 0
+        assert roof.coll_bytes_per_device > 0
+        print("train ok:", arch, roof.bottleneck,
+              f"useful={roof.useful_ratio:.2f}")
+
+    # decode path
+    for arch in ["gemma2-9b", "zamba2-2.7b"]:
+        cfg = get_config(arch, smoke=True).with_(dtype="bfloat16")
+        B, S = 8, 128
+        params_shape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype,
+                                                        jnp.floating)
+                else s.dtype),
+            jax.eval_shape(lambda: Mo.init_params(cfg,
+                                                  jax.random.PRNGKey(0))))
+        cache_shape = jax.eval_shape(
+            lambda: Mo.init_caches(cfg, B, S, jnp.bfloat16))
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        fn = Sv.jit_serve_step(cfg, mesh, params_shape, cache_shape, tok)
+        compiled = fn.lower(params_shape, cache_shape, tok).compile()
+        assert compiled.cost_analysis() is not None
+        print("decode ok:", arch)
+    print("DRYRUN OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Subprocess worker: distributed pipeline correctness on 4 host devices.
+
+Run as: python tests/workers/pipeline_worker.py <check>
+Checks:
+  fp32_equivalence — pipeline fp32 loss == monolithic loss_fn loss
+  aqsgd_buffers    — warmup step fills buffers with boundary activations;
+                     compressed steps then train with finite losses and a
+                     shrinking delta magnitude
+  modes_all_archs  — one pipeline step for dense/moe/ssm/hybrid/audio/vlm
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.aqsgd import CompressionConfig
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as Mo
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.training import pipeline as PL
+
+
+def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
+          lr=0.0):
+    cfg = get_config(arch, smoke=True)
+    if num_layers:
+        cfg = cfg.with_(num_layers=num_layers)
+    mesh = make_debug_mesh(2, 2)
+    pcfg = PL.PipelineConfig(
+        microbatches=M, warmup=warmup,
+        compression=CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
+        remat=True)
+    step, meta = PL.make_train_step(
+        cfg, pcfg, mesh, AdamWConfig(lr=lr, warmup_steps=1,
+                                     schedule="constant"),
+        global_batch=Bg, seq_len=S, buffer_samples=Bg // 2)
+    params = PL.to_pipeline_params(
+        cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), 2)
+    state = {"params": params, "opt": adamw.init_opt_state(params)}
+    if mode == "aqsgd":
+        trunk_seq = meta["trunk_seq"]
+        state["m_out"] = jnp.zeros((2, Bg, trunk_seq, cfg.d_model),
+                                   jnp.bfloat16)
+        state["m_in"] = jnp.zeros_like(state["m_out"])
+    n_text = S - (cfg.num_patches or 0)
+    bmb = Bg // M
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                     (M, bmb, n_text), 0, cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(2),
+                                      (M, bmb, n_text), 0, cfg.vocab_size),
+        "mask": jnp.ones((M, bmb, n_text), jnp.float32),
+        "sample_ids": (jnp.arange(Bg, dtype=jnp.int32)
+                       % (Bg // 2)).reshape(M, bmb),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(4), (M, bmb, cfg.num_patches, cfg.d_model),
+            jnp.float32) * 0.02
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(5), (M, bmb, cfg.encoder_seq, cfg.d_model),
+            jnp.float32) * 0.02
+    return cfg, step, state, batch
+
+
+def check_fp32_equivalence():
+    arch = "gpt2-xl-paper"
+    cfg, step, state, batch = build(arch, "fp32", num_layers=4)
+    _, metrics = step(state, batch, jax.random.PRNGKey(3))
+    pipe_loss = float(metrics["loss"])
+    params = Mo.init_params(cfg.with_(num_layers=4), jax.random.PRNGKey(0))
+    flat = {k: v.reshape(-1, *v.shape[2:]) for k, v in batch.items()}
+    ref_loss, _ = Mo.loss_fn(params, cfg.with_(num_layers=4), flat)
+    print("pipe", pipe_loss, "ref", float(ref_loss))
+    np.testing.assert_allclose(pipe_loss, float(ref_loss), rtol=2e-4)
+    print("OK fp32_equivalence")
+
+
+def check_aqsgd_buffers():
+    cfg, step, state, batch = build("gpt2-xl-paper", "aqsgd", num_layers=4,
+                                    warmup=True, lr=1e-3)
+    key = jax.random.PRNGKey(3)
+    state1, m1 = step(state, batch, key)
+    assert float(jnp.sum(jnp.abs(state1["m_out"].astype(jnp.float32)))) > 0
+    # m_in of stage k must equal m_out of stage k-1 (bit-identical copies)
+    mo = np.asarray(state1["m_out"].astype(jnp.float32))
+    mi = np.asarray(state1["m_in"].astype(jnp.float32))
+    np.testing.assert_allclose(mi[1], mo[0], atol=0)
+    # compressed steps after warmup
+    cfg2, step2, _, _ = build("gpt2-xl-paper", "aqsgd", num_layers=4,
+                              warmup=False, lr=1e-3)
+    losses = []
+    st = state1
+    for i in range(4):
+        st, met = step2(st, batch, jax.random.fold_in(key, i))
+        losses.append(float(met["loss"]))
+        np.testing.assert_allclose(
+            np.asarray(st["m_in"].astype(jnp.float32))[1],
+            np.asarray(st["m_out"].astype(jnp.float32))[0], atol=0)
+    assert np.all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+    print("OK aqsgd_buffers", losses)
+
+
+def check_modes_all_archs():
+    for arch in ["gemma2-9b", "deepseek-moe-16b", "mamba2-1.3b",
+                 "zamba2-2.7b", "whisper-small", "pixtral-12b"]:
+        cfg, step, state, batch = build(arch, "aqsgd", lr=1e-3)
+        _, metrics = step(state, batch, jax.random.PRNGKey(3))
+        l = float(metrics["loss"])
+        assert np.isfinite(l), (arch, l)
+        print("OK", arch, l)
+    print("OK modes_all_archs")
+
+
+
+
+
+def check_expert_parallel():
+    """EP MoE == ZeRO-3 MoE numerically (no-drop capacity), and the
+    pipeline still trains."""
+    import repro.training.pipeline as PLmod
+
+    def build_ep(moe_mode):
+        cfg = get_config("deepseek-moe-16b", smoke=True)
+        mesh = make_debug_mesh(2, 2)
+        pcfg = PL.PipelineConfig(
+            microbatches=2, compression=CompressionConfig(mode="fp32"),
+            moe_mode=moe_mode)
+        step, meta = PL.make_train_step(
+            cfg, pcfg, mesh, AdamWConfig(lr=0.0, warmup_steps=1,
+                                         schedule="constant"),
+            global_batch=4, seq_len=32, buffer_samples=2)
+        params = PL.to_pipeline_params(
+            cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), 2)
+        state = {"params": params, "opt": adamw.init_opt_state(params)}
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                         (2, 2, 32), 0, cfg.vocab_size),
+            "targets": jax.random.randint(jax.random.PRNGKey(2),
+                                          (2, 2, 32), 0, cfg.vocab_size),
+            "mask": jnp.ones((2, 2, 32), jnp.float32),
+            "sample_ids": jnp.arange(4, dtype=jnp.int32).reshape(2, 2),
+        }
+        _, metrics = step(state, batch, jax.random.PRNGKey(3))
+        return float(metrics["loss"])
+
+    l_z3 = build_ep("zero3")
+    l_ep = build_ep("expert_parallel")
+    print("zero3", l_z3, "ep", l_ep)
+    np.testing.assert_allclose(l_ep, l_z3, rtol=1e-4)
+    print("OK expert_parallel")
+
+
+if __name__ == "__main__":
+    globals()["check_" + sys.argv[1]]()
