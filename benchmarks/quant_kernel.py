@@ -1,16 +1,28 @@
-"""Kernel microbench: the AQ-SGD boundary codec.
+"""Kernel microbench: the AQ-SGD boundary codec, fused vs unfused.
 
 Wall-clock on this container measures the *interpret-mode / XLA-CPU*
 path, so the numbers that matter for TPU are the analytic ones: fused
-HBM traffic vs unfused, and wire-compression ratios.  We report both.
+HBM traffic vs unfused, and wire-compression ratios.  We report both,
+for each side of the boundary:
+
+* ``unfused_*``  — the legacy chain (quantize → pack / unpack →
+  dequantize → accumulate) as separate XLA ops, ~6 HBM round-trips;
+* ``fused_*``    — the Pallas kernels behind `repro.core.boundary`
+  (one pass per side; interpret mode on CPU).
+
+``--tiny --json out.json`` is the CI smoke configuration: small shapes,
+machine-readable output uploaded as a nightly artifact so the fused
+hot-path numbers land in the bench trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import functools
+import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import write_csv
 from repro.core import quantization as Q
@@ -18,7 +30,7 @@ from repro.kernels import ops
 
 
 def _time(f, *a, n=5):
-    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else None
+    jax.tree.leaves(f(*a))[0].block_until_ready()          # compile
     t0 = time.time()
     for _ in range(n):
         r = f(*a)
@@ -26,26 +38,41 @@ def _time(f, *a, n=5):
     return (time.time() - t0) / n * 1e6
 
 
-def main() -> list:
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _unfused_sender(a, m, *, bits):
+    """The pre-refactor boundary sender: each step a separate XLA op."""
+    delta = a - m
+    codes, scale = Q.quantize(delta, bits, stochastic=False)
+    packed = Q.pack_codes(codes, bits)
+    m_new = m + Q.dequantize(codes, scale, bits)
+    return packed, scale, m_new
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _unfused_receiver(packed, scale, m, *, bits):
+    d = m.shape[-1]
+    return m + Q.dequantize(Q.unpack_codes(packed, bits, d), scale, bits)
+
+
+def main(tiny: bool = False, json_path: str | None = None) -> list:
     rows = []
-    r, d = 4096, 4096
+    r, d = (256, 512) if tiny else (4096, 4096)
+    reps = 2 if tiny else 5
     a = jax.random.normal(jax.random.PRNGKey(0), (r, d))
     m = a + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (r, d))
-
-    import functools
-
-    @functools.partial(jax.jit, static_argnames=("bits",))
-    def xla_codec(a, m, *, bits):
-        codes, scale = Q.quantize(a - m, bits, stochastic=False)
-        return Q.pack_codes(codes, bits), scale
+    results = {"shape": [r, d], "tiny": tiny, "bench": {}}
 
     for bits in (2, 4, 8):
-        us_xla = _time(lambda: xla_codec(a, m, bits=bits))
-        rows.append((f"xla_codec_b{bits}", f"{us_xla:.0f}", "", ""))
-        print(f"quant_kernel,xla_codec_b{bits},{us_xla:.0f}us,"
-              f"(XLA-CPU reference path)")
-    for bits in (2, 4, 8):
-        us = _time(lambda: ops.boundary_compress(a, m, bits=bits), n=2)
+        us_s_un = _time(lambda: _unfused_sender(a, m, bits=bits), n=reps)
+        us_s_fu = _time(lambda: ops.boundary_compress(a, m, bits=bits),
+                        n=reps)
+        packed, scale, _ = ops.boundary_compress(a, m, bits=bits)
+        us_r_un = _time(
+            lambda: _unfused_receiver(packed, scale, m, bits=bits), n=reps)
+        us_r_fu = _time(
+            lambda: ops.boundary_decompress(packed, scale, m, bits=bits),
+            n=reps)
+
         raw = r * d * 4
         wire = Q.wire_bytes((r, d), bits)
         # fused kernel: read a+m, write packed+scale+m_new
@@ -53,16 +80,39 @@ def main() -> list:
         # unfused chain: sub, abs-max, div, round, pack, dequant, add —
         # each materializes an (r, d) intermediate
         unfused_traffic = raw * 2 + 6 * raw + wire
-        rows.append((f"boundary_compress_b{bits}", f"{us:.0f}",
+        stats = {
+            "unfused_sender_us": us_s_un, "fused_sender_us": us_s_fu,
+            "unfused_receiver_us": us_r_un, "fused_receiver_us": us_r_fu,
+            "wire_ratio": raw / wire,
+            "hbm_traffic_saving": unfused_traffic / fused_traffic,
+        }
+        results["bench"][f"b{bits}"] = stats
+        rows.append((f"sender_b{bits}", f"{us_s_un:.0f}", f"{us_s_fu:.0f}",
                      f"ratio={raw/wire:.1f}x",
                      f"traffic_saving={unfused_traffic/fused_traffic:.2f}x"))
-        print(f"quant_kernel,boundary_compress_b{bits},{us:.0f}us,"
-              f"wire_ratio={raw/wire:.1f}x,"
-              f"fused_traffic_saving={unfused_traffic/fused_traffic:.2f}x")
-    write_csv("quant_kernel.csv", "name,us_per_call,wire_ratio,traffic",
-              rows)
+        rows.append((f"receiver_b{bits}", f"{us_r_un:.0f}",
+                     f"{us_r_fu:.0f}", "", ""))
+        print(f"quant_kernel,b{bits}: sender unfused {us_s_un:.0f}us "
+              f"fused {us_s_fu:.0f}us | receiver unfused {us_r_un:.0f}us "
+              f"fused {us_r_fu:.0f}us | wire_ratio={raw/wire:.1f}x "
+              f"hbm_saving={unfused_traffic/fused_traffic:.2f}x "
+              f"(fused = interpret mode on CPU; analytic columns are the "
+              f"TPU story)")
+
+    write_csv("quant_kernel.csv",
+              "name,unfused_us,fused_us,wire_ratio,traffic", rows)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (small shapes)")
+    ap.add_argument("--json", default=None,
+                    help="also dump machine-readable results to this path")
+    args = ap.parse_args()
+    main(tiny=args.tiny, json_path=args.json)

@@ -16,6 +16,11 @@ Implements Algorithm 1/2 of the paper in functional JAX form:
 
 ``DirectQ`` (AC-GC / TinyScript style, the paper's baseline) and ``fp32``
 (no compression) share the same interface.
+
+All quantize/pack/unpack work routes through `repro.core.boundary`, the
+backend-selectable fused boundary op (``backend="pallas"`` on TPU,
+``"reference"`` jnp chain otherwise); the two backends are bit-identical
+by contract, so ``backend`` never changes the trained model.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import boundary as B
 from repro.core import quantization as Q
 
 
@@ -39,6 +45,7 @@ class CompressionConfig:
     buffer_bits: int = 0           # 0 = raw buffer; else z-bit stored (§H.5)
     buffer_dtype: str = "float32"  # raw-buffer storage dtype
     stochastic: bool = True
+    backend: str = "auto"          # boundary op: reference | pallas | auto
 
     def with_(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -97,8 +104,8 @@ def read_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
     if cc.buffer_bits:
         codes = bufs["codes"][boundary][sample_ids]
         scale = bufs["scale"][boundary][sample_ids]
-        return Q.dequantize(Q.unpack_codes(codes, cc.buffer_bits, d),
-                            scale, cc.buffer_bits)
+        return B.decode(codes, scale, bits=cc.buffer_bits, d=d,
+                        backend=cc.backend)
     return bufs["m"][boundary][sample_ids].astype(jnp.float32)
 
 
@@ -106,9 +113,9 @@ def write_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
                  sample_ids: jax.Array, m_new: jax.Array) -> dict:
     bufs = dict(bufs)
     if cc.buffer_bits:
-        codes, scale = Q.quantize(m_new, cc.buffer_bits, stochastic=False)
-        bufs["codes"] = bufs["codes"].at[boundary, sample_ids].set(
-            Q.pack_codes(codes, cc.buffer_bits))
+        packed, scale = B.encode(m_new, bits=cc.buffer_bits,
+                                 stochastic=False, backend=cc.backend)
+        bufs["codes"] = bufs["codes"].at[boundary, sample_ids].set(packed)
         bufs["scale"] = bufs["scale"].at[boundary, sample_ids].set(scale)
     else:
         bufs["m"] = bufs["m"].at[boundary, sample_ids].set(
@@ -122,10 +129,12 @@ def write_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _make_ste(bw_bits: int, stochastic: bool):
+def _make_ste(bw_bits: int, stochastic: bool, backend: str):
     """Straight-through boundary: forward value = message m, backward
     gradient = Q_bw(∇) (the paper quantizes the backward activation
-    gradient directly — Algorithm 1 line 11)."""
+    gradient directly — Algorithm 1 line 11).  The quantize→pack→unpack
+    round trip runs inside this custom_vjp, so on the pallas backend the
+    backward wire codec is fused too."""
 
     @jax.custom_vjp
     def ste(h, m_used, key):
@@ -140,7 +149,8 @@ def _make_ste(bw_bits: int, stochastic: bool):
         if bw_bits >= 32:
             gq = g
         else:
-            gq = Q.qdq(g, bw_bits, stochastic=stochastic, key=key)
+            gq = B.roundtrip(g, bits=bw_bits, stochastic=stochastic,
+                             key=key, backend=backend)
         return (gq, jnp.zeros_like(g),
                 np.zeros(key.shape, jax.dtypes.float0))
 
@@ -165,24 +175,27 @@ def apply_boundary(cc: CompressionConfig, h: jax.Array, key: jax.Array,
     """
     kf, kb = jax.random.split(key)
     dtype = h.dtype
+    backend = B.resolve_backend(cc.backend)
     h_sg = jax.lax.stop_gradient(h).astype(jnp.float32)
 
     if cc.mode == "fp32":
         return h, None
     if cc.mode == "directq":
-        m_used = Q.qdq(h_sg, cc.fw_bits, stochastic=cc.stochastic, key=kf)
+        m_used = B.roundtrip(h_sg, bits=cc.fw_bits,
+                             stochastic=cc.stochastic, key=kf,
+                             backend=backend)
         m_new = None
     elif cc.mode == "aqsgd":
         assert m is not None and seen is not None
-        delta_q = Q.qdq(h_sg - m, cc.fw_bits, stochastic=cc.stochastic,
-                        key=kf)
-        m_upd = m + delta_q
+        _, _, m_upd = B.encode_delta(h_sg, m, bits=cc.fw_bits,
+                                     stochastic=cc.stochastic, key=kf,
+                                     backend=backend)
         m_used = jnp.where(seen[:, None, None], m_upd, h_sg)
         m_new = m_used
     else:
         raise ValueError(cc.mode)
 
     bw_bits = cc.bw_bits if quantize_bw else 32
-    ste = _make_ste(bw_bits, cc.stochastic)
+    ste = _make_ste(bw_bits, cc.stochastic, backend)
     h_out = ste(h, m_used.astype(dtype), kb)
     return h_out, m_new

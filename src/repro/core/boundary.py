@@ -1,0 +1,144 @@
+"""Backend-selectable AQ-SGD boundary ops — the ONE hot path.
+
+Every boundary crossing in the system (AQ-SGD sender/receiver, DirectQ,
+backward-gradient quantize, z-bit buffer codec) goes through the four
+ops below, each available on two bit-identical backends:
+
+* ``"pallas"``    — the fused TPU kernels in `repro.kernels.quant_pack`:
+  one HBM pass per side instead of the ~6 round-trips of the unfused
+  chain (paper §3.3's "compression is free" claim lives or dies here);
+* ``"reference"`` — the pure-jnp chain over `repro.core.quantization`,
+  kept as the correctness oracle and the fast path on CPU containers
+  where Pallas only runs in interpret mode.
+
+``"auto"`` (the default everywhere) resolves to pallas on TPU and
+reference otherwise; REPRO_BOUNDARY_BACKEND overrides.  The contract
+that the two backends are bit-identical — codes, scales, m_new, and
+backward gradients — is enforced by tests/test_boundary_parity.py.
+
+Stochastic rounding draws ONE uniform tensor here and feeds it to
+either backend, so the wire payload and message buffers never depend on
+the backend.  Scope note: the contract is per-op (same inputs -> same
+bits).  Whole-model training trajectories may still drift at the ulp
+level between backends, because swapping an opaque pallas_call for a
+jnp chain changes how XLA fuses the SURROUNDING model ops — the same
+class of drift as changing XLA versions, and statistically irrelevant
+to convergence (fp32 runs are bit-equal; compressed runs track to
+print precision — see the quickstart).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+from repro.kernels import ops as K
+
+BACKENDS = ("reference", "pallas")
+PACKABLE_BITS = (1, 2, 4, 8)       # dense byte-aligned wire packing
+KERNEL_BITS = (2, 4, 8)            # widths the fused kernels implement
+
+
+def resolve_backend(backend: str = "auto", bits: Optional[int] = None) \
+        -> str:
+    """'auto' -> REPRO_BOUNDARY_BACKEND, else pallas iff running on TPU
+    (interpret-mode pallas on CPU is a debugging path, not a hot path).
+
+    Widths outside KERNEL_BITS (the paper's fw3/bw6 ablations) always
+    resolve to the reference chain — they are simulation-only."""
+    if bits is not None and bits not in KERNEL_BITS:
+        return "reference"
+    if backend == "auto":
+        env = os.environ.get("REPRO_BOUNDARY_BACKEND", "")
+        if env:
+            backend = env
+        else:
+            backend = "pallas" if jax.default_backend() == "tpu" \
+                else "reference"
+    assert backend in BACKENDS, backend
+    return backend
+
+
+def _noise(shape, stochastic: bool, key) -> Optional[jax.Array]:
+    if not stochastic:
+        return None
+    if key is None:
+        raise ValueError("stochastic boundary ops need a PRNG key")
+    return jax.random.uniform(key, shape, jnp.float32)
+
+
+def encode_delta(a, m, *, bits: int, stochastic: bool = False, key=None,
+                 backend: str = "auto"):
+    """AQ-SGD sender: (a, m) -> (packed u8 (..., pw), scale f32 (..., 1),
+    m_new f32 (..., d)) with m_new = m + dequant(codes) — the wire
+    payload plus the updated message buffer, in one fused pass.
+
+    Non-byte-aligned widths (fw3/bw6 ablations) are simulation-only:
+    payload is the raw u8 codes, never densely packed."""
+    backend = resolve_backend(backend, bits)
+    u = _noise(a.shape, stochastic, key)
+    if backend == "pallas":
+        return K.boundary_compress(a, m, u, bits=bits)
+    a32 = a.astype(jnp.float32)
+    m32 = m.astype(jnp.float32)
+    codes, scale = Q.quantize(a32 - m32, bits, stochastic=stochastic,
+                              noise=u)
+    packed = Q.pack_codes(codes, bits) if bits in PACKABLE_BITS else codes
+    m_new = m32 + Q.dequantize(codes, scale, bits)
+    return packed, scale, m_new
+
+
+def decode_accumulate(packed, scale, m, *, bits: int,
+                      backend: str = "auto"):
+    """AQ-SGD receiver: m_new f32 = m + dequant(unpack(packed)).  Applies
+    the SAME quantized delta as the sender, so both buffer replicas stay
+    bit-identical (Algorithm 2)."""
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        return K.boundary_decompress(packed, scale, m, bits=bits)
+    d = m.shape[-1]
+    codes = Q.unpack_codes(packed, bits, d) if bits in PACKABLE_BITS \
+        else packed
+    return m.astype(jnp.float32) + Q.dequantize(codes, scale, bits)
+
+
+def encode(x, *, bits: int, stochastic: bool = False, key=None,
+           backend: str = "auto"):
+    """Direct quantize-and-pack: (packed u8 (..., pw), scale f32).  Used
+    by the DirectQ sender, the backward-gradient wire, and z-bit buffer
+    writes.  Non-byte-aligned widths return raw u8 codes (simulation
+    only)."""
+    backend = resolve_backend(backend, bits)
+    u = _noise(x.shape, stochastic, key)
+    if backend == "pallas":
+        return K.quantize_pack(x, u, bits=bits)
+    codes, scale = Q.quantize(x.astype(jnp.float32), bits,
+                              stochastic=stochastic, noise=u)
+    packed = Q.pack_codes(codes, bits) if bits in PACKABLE_BITS else codes
+    return packed, scale
+
+
+def decode(packed, scale, *, bits: int, d: int, dtype=jnp.float32,
+           backend: str = "auto"):
+    """Inverse of `encode`: (..., pw) u8 + scales -> (..., d) values."""
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        out = K.unpack_dequant(packed, scale, bits=bits, out_dtype=dtype)
+        return out[..., :d]
+    codes = Q.unpack_codes(packed, bits, d) if bits in PACKABLE_BITS \
+        else packed
+    return Q.dequantize(codes, scale, bits, dtype)
+
+
+def roundtrip(x, *, bits: int, stochastic: bool = False, key=None,
+              backend: str = "auto"):
+    """encode -> decode in x.dtype: the wire-faithful fake quant used for
+    backward gradients and DirectQ (== Q.qdq on the reference backend,
+    fused on pallas)."""
+    packed, scale = encode(x, bits=bits, stochastic=stochastic, key=key,
+                           backend=backend)
+    return decode(packed, scale, bits=bits, d=x.shape[-1], dtype=x.dtype,
+                  backend=backend)

@@ -57,18 +57,28 @@ def quantize(
     key: Optional[jax.Array] = None,
     per_row: bool = True,
     scale: Optional[jax.Array] = None,
+    noise: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Quantize to uint8 codes in [0, 2**bits - 1] plus float32 scale."""
+    """Quantize to uint8 codes in [0, 2**bits - 1] plus float32 scale.
+
+    Stochastic rounding draws from `key`, or consumes pre-drawn uniform
+    `noise` of x.shape (``noise < frac`` is exactly what bernoulli(key,
+    frac) computes, so both routes are bit-identical for the same key —
+    the noise route is what keeps the Pallas backend in lockstep)."""
     assert 1 <= bits <= 8, bits
     if scale is None:
         scale = absmax_scale(x, per_row=per_row)
     y = _grid_positions(x, scale, bits)
     if stochastic:
-        if key is None:
-            raise ValueError("stochastic quantization needs a PRNG key")
         lo = jnp.floor(y)
         frac = y - lo
-        bump = jax.random.bernoulli(key, frac).astype(jnp.float32)
+        if noise is not None:
+            bump = (noise < frac).astype(jnp.float32)
+        elif key is not None:
+            bump = jax.random.bernoulli(key, frac).astype(jnp.float32)
+        else:
+            raise ValueError("stochastic quantization needs a PRNG key "
+                             "or a uniform noise tensor")
         codes = lo + bump
     else:
         codes = jnp.round(y)
@@ -77,9 +87,16 @@ def quantize(
 
 def dequantize(codes: jax.Array, scale: jax.Array, bits: int,
                dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    # ((2c - levels) * scale) / levels, in this exact association: 2c -
+    # levels is integer-exact in f32 (immune to FMA contraction), and the
+    # trailing division cannot contract with a downstream add — so every
+    # compilation of this chain (XLA CPU, fused Pallas kernel, eager)
+    # rounds identically.  The bit-identical reference/pallas boundary
+    # backend contract depends on this shape; don't "simplify" it to
+    # (c * (2/levels) - 1) * scale.
     levels = (1 << bits) - 1
-    x = codes.astype(jnp.float32) * (2.0 / levels) - 1.0
-    return (x * scale).astype(dtype)
+    ic = codes.astype(jnp.float32) * 2.0 - float(levels)
+    return ((ic * scale) / levels).astype(dtype)
 
 
 def qdq(

@@ -2,7 +2,12 @@
 
 On this CPU container the kernels execute in interpret mode (the TPU
 mosaic pipeline is the target); set REPRO_PALLAS_INTERPRET=0 on real
-hardware.
+hardware — this flag is the single switch point for every fused op.
+
+The wrappers flatten leading dims to the kernel's (rows, d) layout and
+zero-pad ragged row counts up to a block multiple (padding rows are
+independent under rowwise quantization and sliced off the outputs), so
+callers may pass any (..., d) batch shape.
 """
 from __future__ import annotations
 
@@ -16,28 +21,75 @@ from repro.kernels import flash_attention as _fa
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
-def boundary_compress(a, m, *, bits: int, block_r: int = 128):
+def _padded_rows(r: int, block_r: int) -> int:
+    """Row count the kernel grid actually runs: a multiple of block_r
+    (or of the 8-row f32 sublane when everything fits one block)."""
+    if r >= block_r:
+        return -(-r // block_r) * block_r
+    return -(-r // 8) * 8
+
+
+def _as_rows(x, d: int, block_r: int):
+    """(..., d) -> (padded_rows, d) plus the live row count."""
+    x2 = x.reshape(-1, d)
+    r = x2.shape[0]
+    rp = _padded_rows(r, block_r)
+    if rp != r:
+        x2 = jnp.pad(x2, ((0, rp - r), (0, 0)))
+    return x2, r
+
+
+def boundary_compress(a, m, u=None, *, bits: int, block_r: int = 128):
     """Sender side of an AQ-SGD boundary: (a, m) -> (packed, scale, m_new).
-    a, m: any (..., d); rows are flattened for the kernel grid."""
+    a, m (and optional stochastic noise u): any (..., d)."""
     shape = a.shape
-    a2 = a.reshape(-1, shape[-1])
-    m2 = m.reshape(-1, shape[-1])
+    d = shape[-1]
+    a2, r = _as_rows(a, d, block_r)
+    m2, _ = _as_rows(m, d, block_r)
+    u2 = None if u is None else _as_rows(u, d, block_r)[0]
     packed, scale, m_new = _qp.delta_quantize_pack(
-        a2, m2, bits=bits, block_r=block_r, interpret=INTERPRET)
-    return (packed.reshape(*shape[:-1], -1),
-            scale.reshape(*shape[:-1], 1),
-            m_new.reshape(shape))
+        a2, m2, u2, bits=bits, block_r=block_r, interpret=INTERPRET)
+    return (packed[:r].reshape(*shape[:-1], -1),
+            scale[:r].reshape(*shape[:-1], 1),
+            m_new[:r].reshape(shape))
 
 
 def boundary_decompress(packed, scale, m, *, bits: int,
                         block_r: int = 128):
     """Receiver side: reconstruct m_new = m + dequant(unpack(packed))."""
     shape = m.shape
+    d = shape[-1]
+    p2, r = _as_rows(packed, packed.shape[-1], block_r)
+    s2, _ = _as_rows(scale, 1, block_r)
+    m2, _ = _as_rows(m, d, block_r)
     out = _qp.dequant_unpack_accumulate(
-        packed.reshape(-1, packed.shape[-1]),
-        scale.reshape(-1, 1), m.reshape(-1, shape[-1]),
-        bits=bits, block_r=block_r, interpret=INTERPRET)
-    return out.reshape(shape)
+        p2, s2, m2, bits=bits, block_r=block_r, interpret=INTERPRET)
+    return out[:r].reshape(shape)
+
+
+def quantize_pack(x, u=None, *, bits: int, block_r: int = 128):
+    """Fused absmax -> quantize -> pack for any (..., d) tensor: the
+    DirectQ sender, backward-gradient quantize, and z-bit buffer write."""
+    shape = x.shape
+    d = shape[-1]
+    x2, r = _as_rows(x, d, block_r)
+    u2 = None if u is None else _as_rows(u, d, block_r)[0]
+    packed, scale = _qp.quantize_pack(x2, u2, bits=bits, block_r=block_r,
+                                      interpret=INTERPRET)
+    return (packed[:r].reshape(*shape[:-1], -1),
+            scale[:r].reshape(*shape[:-1], 1))
+
+
+def unpack_dequant(packed, scale, *, bits: int, out_dtype=jnp.float32,
+                   block_r: int = 128):
+    """Fused unpack -> dequantize; inverse of quantize_pack."""
+    shape = packed.shape
+    pw = shape[-1]
+    p2, r = _as_rows(packed, pw, block_r)
+    s2, _ = _as_rows(scale, 1, block_r)
+    out = _qp.unpack_dequant(p2, s2, bits=bits, out_dtype=out_dtype,
+                             block_r=block_r, interpret=INTERPRET)
+    return out[:r].reshape(*shape[:-1], out.shape[-1])
 
 
 def flash_attention(q, k, v, **kw):

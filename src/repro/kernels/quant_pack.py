@@ -7,6 +7,22 @@ the activation; each kernel below fuses its whole side into ONE pass
 (read a,m → write packed, scale, m_new), which is what makes compression
 free on the compute critical path (paper §3.3).
 
+Four fused ops cover every boundary crossing in the pipeline:
+
+* ``delta_quantize_pack``      — AQ-SGD sender (delta → wire + m_new);
+* ``dequant_unpack_accumulate``— AQ-SGD receiver (wire + m → m_new);
+* ``quantize_pack``            — DirectQ sender, backward-gradient
+                                 quantize, and z-bit buffer writes;
+* ``unpack_dequant``           — the matching receiver / buffer read.
+
+Stochastic rounding takes the uniform noise tensor as an explicit kernel
+input rather than seeding the on-core PRNG (pltpu.prng_random_bits): the
+reference jnp backend consumes the *same* noise, which is what makes the
+two backends bit-identical — the contract tests/test_boundary_parity.py
+enforces.  On real TPUs the noise input costs one extra HBM read; moving
+to the on-core PRNG is a pure perf follow-up that must relax that
+contract to a statistical one.
+
 TPU mapping: rows (tokens) are tiled along the grid; each grid step holds
 a (BLOCK_R, d) tile in VMEM — d (the model dim, ≤ 8 KiB per row in bf16)
 stays whole so the rowwise absmax is a single in-VMEM reduction, and the
@@ -14,7 +30,8 @@ lane dimension stays 128-aligned for the VPU.  Packing uses u32 shifts on
 the (BLOCK_R, d/k, k) view.
 
 Kernels are validated against ref.py in interpret mode (CPU container);
-on real TPUs drop interpret=True.
+on real TPUs drop interpret=True — `repro.kernels.ops.INTERPRET`
+(REPRO_PALLAS_INTERPRET=0) is the single switch point.
 """
 from __future__ import annotations
 
@@ -32,36 +49,80 @@ def _levels(bits: int) -> int:
     return (1 << bits) - 1
 
 
+def _quant_codes(x, scale, bits: int, u=None):
+    """f32 values + rowwise scale -> u32 codes on the uniform grid.
+
+    u: uniform(0,1) noise of x.shape for stochastic rounding (the same
+    comparison `u < frac` as jax.random.bernoulli, so codes match the
+    reference backend bit-for-bit); None = round-to-nearest.
+    """
+    lv = _levels(bits)
+    y = jnp.clip((x / scale + 1.0) * (0.5 * lv), 0.0, lv)
+    if u is None:
+        return jnp.round(y).astype(jnp.uint32)
+    lo = jnp.floor(y)
+    bump = (u < (y - lo)).astype(jnp.float32)
+    return (lo + bump).astype(jnp.uint32)
+
+
+def _pack(codes, bits: int):
+    """(r, d) u32 codes -> (r, d*bits/8) u8, k codes per byte."""
+    k = 8 // bits
+    r, d = codes.shape
+    grouped = codes.reshape(r, d // k, k)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+
+
+def _unpack(packed, bits: int):
+    """(r, pw) u8 -> (r, pw * 8/bits) u32 codes."""
+    k = 8 // bits
+    lv = _levels(bits)
+    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
+    vals = (packed.astype(jnp.uint32)[..., None] >> shifts) & jnp.uint32(lv)
+    return vals.reshape(packed.shape[0], -1)
+
+
+def _dequant(codes, scale, bits: int):
+    # must mirror core.quantization.dequantize op-for-op: 2c - lv is
+    # integer-exact and the trailing division blocks FMA contraction, so
+    # the fused kernel and the reference chain round identically under
+    # any compiler (the bit-identical backend contract).
+    lv = _levels(bits)
+    ic = codes.astype(jnp.float32) * 2.0 - float(lv)
+    return (ic * scale) / lv
+
+
 # ---------------------------------------------------------------------------
-# sender: delta -> quantize -> pack (+ buffer update)
+# AQ-SGD sender: delta -> quantize -> pack (+ buffer update)
 # ---------------------------------------------------------------------------
 
-def _dqp_kernel(a_ref, m_ref, packed_ref, scale_ref, mnew_ref, *,
-                bits: int):
+def _dqp_kernel(a_ref, m_ref, *rest, bits: int, stochastic: bool):
+    if stochastic:
+        u_ref, packed_ref, scale_ref, mnew_ref = rest
+        u = u_ref[...]
+    else:
+        packed_ref, scale_ref, mnew_ref = rest
+        u = None
     a = a_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
     delta = a - m
     scale = jnp.maximum(jnp.max(jnp.abs(delta), axis=-1, keepdims=True),
                         _EPS)
-    lv = _levels(bits)
-    y = jnp.clip((delta / scale + 1.0) * (0.5 * lv), 0.0, lv)
-    codes = jnp.round(y).astype(jnp.uint32)
-    k = 8 // bits
-    r, d = codes.shape
-    grouped = codes.reshape(r, d // k, k)
-    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
-    packed_ref[...] = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    codes = _quant_codes(delta, scale, bits, u)
+    packed_ref[...] = _pack(codes, bits)
     scale_ref[...] = scale
-    deq = (codes.astype(jnp.float32) * (2.0 / lv) - 1.0) * scale
-    mnew_ref[...] = (m + deq).astype(mnew_ref.dtype)
+    mnew_ref[...] = (m + _dequant(codes, scale, bits)).astype(mnew_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block_r",
                                              "interpret"))
-def delta_quantize_pack(a, m, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
+def delta_quantize_pack(a, m, u=None, *, bits: int,
+                        block_r: int = DEFAULT_BLOCK_R,
                         interpret: bool = True):
-    """a, m: (R, d).  Returns (packed (R, d//(8/bits)) u8, scale (R, 1)
-    f32, m_new (R, d) f32)."""
+    """a, m: (R, d); u: optional uniform noise (R, d) for stochastic
+    rounding.  Returns (packed (R, d//(8/bits)) u8, scale (R, 1) f32,
+    m_new (R, d) f32)."""
     assert bits in (2, 4, 8), bits
     r, d = a.shape
     k = 8 // bits
@@ -69,13 +130,16 @@ def delta_quantize_pack(a, m, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
     assert r % block_r == 0 or r < block_r, (r, block_r)
     br = min(block_r, r)
     grid = (r // br,)
+    row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    in_specs = [row_spec, row_spec]
+    args = [a, m]
+    if u is not None:
+        in_specs.append(row_spec)
+        args.append(u)
     return pl.pallas_call(
-        functools.partial(_dqp_kernel, bits=bits),
+        functools.partial(_dqp_kernel, bits=bits, stochastic=u is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, d), lambda i: (i, 0)),
-            pl.BlockSpec((br, d), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((br, d // k), lambda i: (i, 0)),
             pl.BlockSpec((br, 1), lambda i: (i, 0)),
@@ -87,25 +151,18 @@ def delta_quantize_pack(a, m, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
             jax.ShapeDtypeStruct((r, d), jnp.float32),
         ],
         interpret=interpret,
-    )(a, m)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
-# receiver: unpack -> dequantize -> accumulate into the buffer replica
+# AQ-SGD receiver: unpack -> dequantize -> accumulate into the buffer
 # ---------------------------------------------------------------------------
 
 def _dua_kernel(packed_ref, scale_ref, m_ref, mnew_ref, *, bits: int):
-    packed = packed_ref[...].astype(jnp.uint32)
-    scale = scale_ref[...]
+    codes = _unpack(packed_ref[...], bits)
     m = m_ref[...].astype(jnp.float32)
-    k = 8 // bits
-    lv = _levels(bits)
-    shifts = (jnp.arange(k, dtype=jnp.uint32) * bits)[None, None, :]
-    vals = (packed[..., None] >> shifts) & jnp.uint32(lv)
-    r = packed.shape[0]
-    codes = vals.reshape(r, -1)
-    deq = (codes.astype(jnp.float32) * (2.0 / lv) - 1.0) * scale
-    mnew_ref[...] = (m + deq).astype(mnew_ref.dtype)
+    mnew_ref[...] = (m + _dequant(codes, scale_ref[...], bits)
+                     ).astype(mnew_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "block_r",
@@ -118,6 +175,7 @@ def dequant_unpack_accumulate(packed, scale, m, *, bits: int,
     assert bits in (2, 4, 8), bits
     r, d = m.shape
     k = 8 // bits
+    assert r % block_r == 0 or r < block_r, (r, block_r)
     br = min(block_r, r)
     grid = (r // br,)
     return pl.pallas_call(
@@ -132,3 +190,90 @@ def dequant_unpack_accumulate(packed, scale, m, *, bits: int,
         out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
         interpret=interpret,
     )(packed, scale, m)
+
+
+# ---------------------------------------------------------------------------
+# DirectQ / backward-gradient / buffer codec: absmax -> quantize -> pack
+# ---------------------------------------------------------------------------
+
+def _qp_kernel(x_ref, *rest, bits: int, stochastic: bool):
+    if stochastic:
+        u_ref, packed_ref, scale_ref = rest
+        u = u_ref[...]
+    else:
+        packed_ref, scale_ref = rest
+        u = None
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), _EPS)
+    packed_ref[...] = _pack(_quant_codes(x, scale, bits, u), bits)
+    scale_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r",
+                                             "interpret"))
+def quantize_pack(x, u=None, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
+                  interpret: bool = True):
+    """x: (R, d); u: optional uniform noise (R, d).  Returns
+    (packed (R, d//(8/bits)) u8, scale (R, 1) f32) — one fused pass for
+    the DirectQ sender, backward-gradient quantize, and z-bit buffer
+    writes."""
+    assert bits in (2, 4, 8), bits
+    r, d = x.shape
+    k = 8 // bits
+    assert d % k == 0, (d, bits)
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    in_specs = [row_spec]
+    args = [x]
+    if u is not None:
+        in_specs.append(row_spec)
+        args.append(u)
+    return pl.pallas_call(
+        functools.partial(_qp_kernel, bits=bits, stochastic=u is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((br, d // k), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, d // k), jnp.uint8),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+def _ud_kernel(packed_ref, scale_ref, out_ref, *, bits: int):
+    codes = _unpack(packed_ref[...], bits)
+    out_ref[...] = _dequant(codes, scale_ref[...], bits
+                            ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r", "out_dtype",
+                                             "interpret"))
+def unpack_dequant(packed, scale, *, bits: int, out_dtype=jnp.float32,
+                   block_r: int = DEFAULT_BLOCK_R, interpret: bool = True):
+    """packed (R, pw) u8, scale (R, 1) f32 -> values (R, pw * 8/bits) in
+    out_dtype — one fused pass for the DirectQ/backward receiver and
+    z-bit buffer reads."""
+    assert bits in (2, 4, 8), bits
+    r, pw = packed.shape
+    k = 8 // bits
+    d = pw * k
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_ud_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, pw), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(packed, scale)

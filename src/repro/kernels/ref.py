@@ -8,24 +8,57 @@ import jax.numpy as jnp
 _EPS = 1e-12
 
 
-def delta_quantize_pack_ref(a, m, bits: int):
-    """AQ-SGD sender side: delta -> rowwise absmax scale -> b-bit codes ->
-    dense uint8 packing.  a, m: (R, d) float.  Returns (packed (R, d*b/8),
-    scale (R, 1) f32, m_new (R, d) f32)."""
-    delta = a.astype(jnp.float32) - m.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(delta), axis=-1, keepdims=True),
-                        _EPS)
+def _codes_ref(x, scale, bits: int, u=None):
     levels = (1 << bits) - 1
-    y = jnp.clip((delta / scale + 1.0) * (0.5 * levels), 0.0, levels)
-    codes = jnp.round(y).astype(jnp.uint8)
+    y = jnp.clip((x / scale + 1.0) * (0.5 * levels), 0.0, levels)
+    if u is None:
+        return jnp.round(y).astype(jnp.uint8)
+    lo = jnp.floor(y)
+    return (lo + (u < (y - lo)).astype(jnp.float32)).astype(jnp.uint8)
+
+
+def _pack_ref(codes, bits: int):
     k = 8 // bits
     r, d = codes.shape
     grouped = codes.reshape(r, d // k, k).astype(jnp.uint32)
     shifts = jnp.arange(k, dtype=jnp.uint32) * bits
-    packed = jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
-    deq = (codes.astype(jnp.float32) * (2.0 / levels) - 1.0) * scale
-    m_new = m.astype(jnp.float32) + deq
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+
+
+def _dequant_ref(codes, scale, bits: int):
+    """Same association as core.quantization.dequantize (2c - lv exact,
+    trailing division) so the oracle is FMA-contraction-proof too."""
+    levels = (1 << bits) - 1
+    ic = codes.astype(jnp.float32) * 2.0 - float(levels)
+    return (ic * scale) / levels
+
+
+def delta_quantize_pack_ref(a, m, bits: int, u=None):
+    """AQ-SGD sender side: delta -> rowwise absmax scale -> b-bit codes ->
+    dense uint8 packing.  a, m: (R, d) float; u: optional uniform noise
+    for stochastic rounding.  Returns (packed (R, d*b/8), scale (R, 1)
+    f32, m_new (R, d) f32)."""
+    delta = a.astype(jnp.float32) - m.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(delta), axis=-1, keepdims=True),
+                        _EPS)
+    codes = _codes_ref(delta, scale, bits, u)
+    packed = _pack_ref(codes, bits)
+    m_new = m.astype(jnp.float32) + _dequant_ref(codes, scale, bits)
     return packed, scale, m_new
+
+
+def quantize_pack_ref(x, bits: int, u=None):
+    """DirectQ/backward/buffer sender side: absmax -> codes -> packing."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), _EPS)
+    return _pack_ref(_codes_ref(x, scale, bits, u), bits), scale
+
+
+def unpack_dequant_ref(packed, scale, bits: int):
+    """Inverse of quantize_pack_ref (full packed width, no accumulate)."""
+    return dequant_unpack_accumulate_ref(
+        packed, scale, jnp.zeros((packed.shape[0],
+                                  packed.shape[1] * (8 // bits))), bits)
 
 
 def dequant_unpack_accumulate_ref(packed, scale, m, bits: int):
@@ -38,8 +71,7 @@ def dequant_unpack_accumulate_ref(packed, scale, m, bits: int):
     vals = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
     r = packed.shape[0]
     codes = vals.reshape(r, -1)
-    deq = (codes.astype(jnp.float32) * (2.0 / levels) - 1.0) * scale
-    return m.astype(jnp.float32) + deq
+    return m.astype(jnp.float32) + _dequant_ref(codes, scale, bits)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=10 ** 9,

@@ -7,12 +7,36 @@ before the first jax device query.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax: Auto is the default
+    AxisType = None
+
+try:  # jax >= 0.5
+    from jax import shard_map as _shard_map
+    _SM_KW = {"check_vma": False}
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
 
 
 def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_auto(shape, axes):
+    """Version-portable mesh with all axes in Auto (collective) mode."""
+    return _mesh(shape, axes)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable jax.shard_map with replication checking off."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_SM_KW)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

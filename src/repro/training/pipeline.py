@@ -40,12 +40,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from repro.configs.base import ModelConfig
+from repro.core import boundary as B
 from repro.core import quantization as Q
 from repro.core.aqsgd import CompressionConfig
-from repro.launch.mesh import data_axes
+from repro.launch.mesh import data_axes, shard_map
 from repro.models import layers as L
 from repro.models import model as Mo
 from repro.models import moe as Me
@@ -237,24 +237,27 @@ def gather_fsdp(tree, dims_tree):
 
 @functools.lru_cache(maxsize=None)
 def make_transfer(mode: str, fw_bits: int, bw_bits: int, stochastic: bool,
-                  num_stages: int, axis: str = "model"):
+                  num_stages: int, axis: str = "model",
+                  backend: str = "reference"):
     """Returns transfer(out, m_out_s, m_in_s, key) ->
     (recv, new_m_out_s, new_m_in_s); all (mb, S, d) floats.
 
-    mode: 'fp32' | 'warmup' | 'directq' | 'aqsgd'."""
+    mode: 'fp32' | 'warmup' | 'directq' | 'aqsgd'.  backend selects the
+    boundary codec (`repro.core.boundary`): the ppermute ships exactly
+    the packed uint8 codes + f32 scales the fused kernel emits — nothing
+    is re-packed on the wire path."""
+    if mode in ("directq", "aqsgd"):
+        # the real wire requires dense byte-aligned packing; fw3/bw6
+        # ablation widths are simulation-only (training/simulated.py)
+        assert fw_bits in B.PACKABLE_BITS, \
+            f"wire fw_bits must be one of {B.PACKABLE_BITS}, got {fw_bits}"
+        assert bw_bits >= 32 or bw_bits in B.PACKABLE_BITS, \
+            f"wire bw_bits must be one of {B.PACKABLE_BITS}, got {bw_bits}"
     fwd_perm = tuple((i, (i + 1) % num_stages) for i in range(num_stages))
     bwd_perm = tuple((j, i) for i, j in fwd_perm)
 
     def pp(x, perm):
         return jax.lax.ppermute(x, axis, perm)
-
-    def q_pack(x, bits, key):
-        codes, scale = Q.quantize(x, bits, stochastic=stochastic, key=key)
-        return Q.pack_codes(codes, bits), scale
-
-    def unpack_dq(packed, scale, bits, n, dtype):
-        return Q.dequantize(Q.unpack_codes(packed, bits, n), scale, bits,
-                            dtype)
 
     def _fwd(out, m_out_s, m_in_s, key):
         d = out.shape[-1]
@@ -265,20 +268,22 @@ def make_transfer(mode: str, fw_bits: int, bw_bits: int, stochastic: bool,
             else:
                 new_m_out, new_m_in = m_out_s, m_in_s
         elif mode == "directq":
-            packed, scale = q_pack(out.astype(jnp.float32), fw_bits, key)
+            packed, scale = B.encode(out, bits=fw_bits,
+                                     stochastic=stochastic, key=key,
+                                     backend=backend)
             packed, scale = pp(packed, fwd_perm), pp(scale, fwd_perm)
-            recv = unpack_dq(packed, scale, fw_bits, d, out.dtype)
+            recv = B.decode(packed, scale, bits=fw_bits, d=d,
+                            dtype=out.dtype, backend=backend)
             new_m_out, new_m_in = m_out_s, m_in_s
         elif mode == "aqsgd":
-            delta = out.astype(jnp.float32) - m_out_s.astype(jnp.float32)
-            packed, scale = q_pack(delta, fw_bits, key)
-            dq = unpack_dq(packed, scale, fw_bits, d, jnp.float32)
-            new_m_out = (m_out_s.astype(jnp.float32) + dq
-                         ).astype(m_out_s.dtype)
+            packed, scale, nmo = B.encode_delta(
+                out, m_out_s, bits=fw_bits, stochastic=stochastic,
+                key=key, backend=backend)
+            new_m_out = nmo.astype(m_out_s.dtype)
             packed, scale = pp(packed, fwd_perm), pp(scale, fwd_perm)
-            rdq = unpack_dq(packed, scale, fw_bits, d, jnp.float32)
-            new_m_in = (m_in_s.astype(jnp.float32) + rdq
-                        ).astype(m_in_s.dtype)
+            new_m_in = B.decode_accumulate(
+                packed, scale, m_in_s, bits=fw_bits,
+                backend=backend).astype(m_in_s.dtype)
             recv = new_m_in.astype(out.dtype)
         else:
             raise ValueError(mode)
@@ -302,9 +307,12 @@ def make_transfer(mode: str, fw_bits: int, bw_bits: int, stochastic: bool,
             gout = pp(g, bwd_perm)
         else:
             kb = jax.random.fold_in(key, 7)
-            packed, scale = q_pack(g.astype(jnp.float32), bw_bits, kb)
+            packed, scale = B.encode(g, bits=bw_bits,
+                                     stochastic=stochastic, key=kb,
+                                     backend=backend)
             packed, scale = pp(packed, bwd_perm), pp(scale, bwd_perm)
-            gout = unpack_dq(packed, scale, bw_bits, d, g.dtype)
+            gout = B.decode(packed, scale, bits=bw_bits, d=d,
+                            dtype=g.dtype, backend=backend)
         zero = np.zeros(key.shape, jax.dtypes.float0)
         return (gout, jnp.zeros(g.shape, mo_dt), jnp.zeros(g.shape, mi_dt),
                 zero)
@@ -318,20 +326,26 @@ def make_transfer(mode: str, fw_bits: int, bw_bits: int, stochastic: bool,
 # ---------------------------------------------------------------------------
 
 def buffer_read(pcfg: PipelineConfig, buf, ids):
-    """buf slice for a microbatch -> f32 (mb, S, d)."""
+    """buf slice for a microbatch -> f32 (mb, S, d).
+
+    Messages are never differentiated (the transfer custom_vjp discards
+    their cotangents), so the codec runs under stop_gradient — which also
+    keeps the fused pallas decode out of the autodiff trace."""
     if pcfg.buffer_bits:
-        codes = buf["codes"][ids]
+        codes = jax.lax.stop_gradient(buf["codes"][ids])
+        scale = jax.lax.stop_gradient(buf["scale"][ids])
         d = buf["codes"].shape[-1] * Q.codes_per_byte(pcfg.buffer_bits)
-        return Q.dequantize(Q.unpack_codes(codes, pcfg.buffer_bits, d),
-                            buf["scale"][ids], pcfg.buffer_bits)
+        return B.decode(codes, scale, bits=pcfg.buffer_bits, d=d,
+                        backend=pcfg.compression.backend)
     return buf[ids].astype(jnp.float32)
 
 
 def buffer_write(pcfg: PipelineConfig, buf, ids, val, keep_mask):
     """Store new messages at ids (keep old rows where ~keep_mask)."""
     if pcfg.buffer_bits:
-        codes, scale = Q.quantize(val, pcfg.buffer_bits, stochastic=False)
-        packed = Q.pack_codes(codes, pcfg.buffer_bits)
+        packed, scale = B.encode(jax.lax.stop_gradient(val),
+                                 bits=pcfg.buffer_bits, stochastic=False,
+                                 backend=pcfg.compression.backend)
         old_c, old_s = buf["codes"][ids], buf["scale"][ids]
         m = keep_mask[..., None, None]
         return {
@@ -481,7 +495,8 @@ def make_pipeline_fn(cfg: ModelConfig, pcfg: PipelineConfig,
     cc = pcfg.compression
     mode = "warmup" if (pcfg.warmup and cc.mode == "aqsgd") else cc.mode
     has_bufs = cc.mode == "aqsgd"
-    transfer = make_transfer(mode, cc.fw_bits, cc.bw_bits, cc.stochastic, K)
+    transfer = make_transfer(mode, cc.fw_bits, cc.bw_bits, cc.stochastic, K,
+                             backend=B.resolve_backend(cc.backend))
     stage_fn = make_stage_fn(cfg, pcfg, lay, layer_dims, shared_dims,
                              exp_axes, ep_size)
 
@@ -625,8 +640,7 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                 P(None, d_ax), buf_spec, buf_spec, P())
     out_specs = (P("model", None, d_ax, None, None), buf_spec, buf_spec)
 
-    smap = shard_map(pipeline_fn, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_vma=False)
+    smap = shard_map(pipeline_fn, mesh, in_specs, out_specs)
 
     # ---- loss -------------------------------------------------------------
     def loss_from_hidden(params, h, targets, mask):

@@ -10,6 +10,13 @@ results measured here transfer to the shard_map pipeline bit-for-bit
 (up to collective reduction order).
 
 This is the engine behind the paper-validation benchmarks (Fig. 1a/3/5/9).
+
+The boundary codec backend (fused Pallas kernels vs reference jnp chain)
+is selected by ``CompressionConfig.backend`` and flows through
+``apply_boundary``/``read_buffer``/``write_buffer`` unchanged.  The two
+backends are bit-identical per op (see core.boundary), so convergence
+results measured here transfer across backends up to the usual
+compiler-fusion ulp noise in the surrounding model compute.
 """
 from __future__ import annotations
 

@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow          # multi-process workers, minutes
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -21,8 +23,8 @@ def run_worker(script, arg, timeout=1500):
 
 
 @pytest.mark.parametrize("check", [
-    "fp32_equivalence", "aqsgd_buffers", "modes_all_archs",
-    "expert_parallel"])
+    "fp32_equivalence", "aqsgd_buffers", "zbit_buffers",
+    "modes_all_archs", "expert_parallel"])
 def test_pipeline(check):
     out = run_worker("pipeline_worker.py", check)
     assert f"OK {check}" in out or "OK" in out

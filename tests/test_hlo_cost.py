@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.launch.hlo_cost import hlo_cost
+from repro.launch.mesh import make_mesh_auto, shard_map
 
 
 def _compiled(f, *specs):
@@ -65,8 +66,7 @@ def test_grad_flops_roughly_triple():
 
 
 def test_collective_bytes_counted_with_trips():
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((1,), ("x",))
 
     def f(x):
         def body(c, _):
@@ -74,10 +74,8 @@ def test_collective_bytes_counted_with_trips():
         c, _ = jax.lax.scan(body, x, None, length=4)
         return c
 
-    smapped = jax.shard_map(f, mesh=mesh,
-                            in_specs=jax.sharding.PartitionSpec("x"),
-                            out_specs=jax.sharding.PartitionSpec("x"),
-                            check_vma=False)
+    smapped = shard_map(f, mesh, jax.sharding.PartitionSpec("x"),
+                        jax.sharding.PartitionSpec("x"))
     x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
     cost = hlo_cost(jax.jit(smapped).lower(x).compile().as_text())
     # 4 iterations x (8*128*4) bytes; single-device all-reduce may be

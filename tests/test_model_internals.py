@@ -158,6 +158,7 @@ def test_moe_capacity_drops_bounded():
 # prefill + decode consistency (the serving path)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [
     "stablelm-12b", "gemma2-9b", "mixtral-8x22b", "deepseek-moe-16b",
     "mamba2-1.3b", "zamba2-2.7b", "whisper-small", "pixtral-12b",

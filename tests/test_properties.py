@@ -1,0 +1,66 @@
+"""Hypothesis property tests for the quantizer, wire packing, and the
+fused Pallas boundary kernels.
+
+Collected only when hypothesis is installed (CI installs it via the
+`dev` extra); pytest.importorskip keeps collection green without it.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+from repro.kernels.quant_pack import delta_quantize_pack
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    rows=st.integers(1, 5),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_wire_roundtrip_equals_qdq(bits, rows, n, seed):
+    """Wire form (quantize→pack→unpack→dequantize) == fake-quant qdq."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, n), dtype=jnp.float32) * 3.0
+    codes, scale = q.quantize(x, bits, stochastic=False)
+    wire = q.pack_codes(codes, bits)
+    xh_wire = q.dequantize(q.unpack_codes(wire, bits, n), scale, bits)
+    xh_sim = q.qdq(x, bits, stochastic=False)
+    np.testing.assert_allclose(np.asarray(xh_wire), np.asarray(xh_sim),
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    scale_pow=st.integers(-3, 3),
+)
+def test_property_quantize_within_grid(bits, seed, scale_pow):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4, 64)) * (10.0 ** scale_pow)
+    codes, _ = q.quantize(x, bits, stochastic=True, key=key)
+    assert int(jnp.max(codes)) <= (1 << bits) - 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]),
+       r=st.sampled_from([4, 32, 128]),
+       dscale=st.floats(1e-3, 1e3),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_property_roundtrip_error_bounded(bits, r, dscale, seed):
+    """|reconstruction - truth| <= one quantization cell, any magnitude."""
+    d = 256
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (r, d)) * dscale
+    m = jnp.zeros((r, d))
+    packed, scale, m_new = delta_quantize_pack(a, m, bits=bits)
+    cell = 2.0 * np.asarray(scale) / ((1 << bits) - 1)
+    err = np.abs(np.asarray(m_new) - np.asarray(a))
+    assert np.all(err <= 0.5 * cell + 1e-6 * dscale)

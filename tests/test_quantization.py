@@ -1,9 +1,11 @@
-"""Unit + property tests for the uniform quantizer and wire packing."""
+"""Unit tests for the uniform quantizer and wire packing.
+
+Hypothesis property tests live in tests/test_properties.py (guarded by
+pytest.importorskip so collection succeeds without hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import quantization as q
 
@@ -65,36 +67,33 @@ def test_wire_bytes():
     assert q.wire_bytes((8, 100), 8) == 8 * 100 + 8 * 4
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    bits=st.sampled_from([2, 4, 8]),
-    rows=st.integers(1, 5),
-    n=st.integers(1, 130),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_property_wire_roundtrip_equals_qdq(bits, rows, n, seed):
+def test_wire_roundtrip_equals_qdq():
     """Wire form (quantize→pack→unpack→dequantize) == fake-quant qdq."""
-    key = jax.random.PRNGKey(seed)
-    x = jax.random.normal(key, (rows, n), dtype=jnp.float32) * 3.0
-    codes, scale = q.quantize(x, bits, stochastic=False)
-    wire = q.pack_codes(codes, bits)
-    xh_wire = q.dequantize(q.unpack_codes(wire, bits, n), scale, bits)
-    xh_sim = q.qdq(x, bits, stochastic=False)
-    np.testing.assert_allclose(np.asarray(xh_wire), np.asarray(xh_sim),
-                               rtol=0, atol=0)
+    for bits in (2, 4, 8):
+        for n in (1, 3, 100, 128):
+            key = jax.random.PRNGKey(bits * 1000 + n)
+            x = jax.random.normal(key, (4, n), dtype=jnp.float32) * 3.0
+            codes, scale = q.quantize(x, bits, stochastic=False)
+            wire = q.pack_codes(codes, bits)
+            xh_wire = q.dequantize(q.unpack_codes(wire, bits, n), scale,
+                                   bits)
+            xh_sim = q.qdq(x, bits, stochastic=False)
+            np.testing.assert_allclose(np.asarray(xh_wire),
+                                       np.asarray(xh_sim), rtol=0, atol=0)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    bits=st.sampled_from([2, 4, 8]),
-    seed=st.integers(0, 2**31 - 1),
-    scale_pow=st.integers(-3, 3),
-)
-def test_property_quantize_within_grid(bits, seed, scale_pow):
-    key = jax.random.PRNGKey(seed)
-    x = jax.random.normal(key, (4, 64)) * (10.0 ** scale_pow)
-    codes, _ = q.quantize(x, bits, stochastic=True, key=key)
-    assert int(jnp.max(codes)) <= (1 << bits) - 1
+def test_noise_route_matches_key_route():
+    """quantize(noise=uniform(key)) == quantize(key=key): the identity
+    that lets the Pallas backend share one noise draw with the
+    reference chain."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(jax.random.PRNGKey(10), (16, 128)) * 2.0
+    for bits in (2, 4, 8):
+        c1, s1 = q.quantize(x, bits, stochastic=True, key=key)
+        u = jax.random.uniform(key, x.shape, jnp.float32)
+        c2, s2 = q.quantize(x, bits, stochastic=True, noise=u)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
 
 
 def test_zero_input_safe():

@@ -41,6 +41,7 @@ def test_forward_loss_finite(arch):
     assert float(metrics["ce"]) < np.log(cfg.vocab_size) + 3.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_reduces_loss(arch):
     """One SGD step on a fixed batch must not blow up, and several steps

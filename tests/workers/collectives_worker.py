@@ -13,11 +13,11 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import quantized_psum_mean
+from repro.launch.mesh import make_mesh_auto, shard_map
 
 
 def main():
-    mesh = jax.make_mesh((4,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((4,), ("d",))
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 256))
     true_mean = jnp.mean(x, axis=0)
 
@@ -26,9 +26,7 @@ def main():
             return quantized_psum_mean(xs[0], "d", bits, key[0],
                                        stochastic=True)[None]
 
-        fn = jax.jit(jax.shard_map(
-            f, mesh=mesh, in_specs=(P("d"), P("d")),
-            out_specs=P("d"), check_vma=False))
+        fn = jax.jit(shard_map(f, mesh, (P("d"), P("d")), P("d")))
         keys = jax.random.split(jax.random.PRNGKey(1), 4)
         # each device returns the same mean; average over repeats to test
         # unbiasedness

@@ -12,12 +12,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_mesh_auto, shard_map
 from repro.models import moe as M
 
 
 def main():
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((4,), ("data",))
     for E, topk in [(2, 1), (4, 2), (8, 2), (16, 4)]:
         d, ff, B, S = 32, 64, 4, 16
         p = M.init_moe(jax.random.PRNGKey(E), d, E, ff)
@@ -28,9 +28,7 @@ def main():
                                ep_axis="data", ep_size=4)
             return out
 
-        ep_sharded = jax.jit(jax.shard_map(
-            ep, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-            check_vma=False))
+        ep_sharded = jax.jit(shard_map(ep, mesh, P("data"), P("data")))
         o_ref = jax.vmap(lambda xb: M.moe_ffn(
             p, xb[None], top_k=topk, capacity_factor=8.0)[0][0])(x)
         o_ep = ep_sharded(x)

@@ -26,7 +26,7 @@ from repro.training import pipeline as PL
 
 
 def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
-          lr=0.0):
+          lr=0.0, buffer_bits=0):
     cfg = get_config(arch, smoke=True)
     if num_layers:
         cfg = cfg.with_(num_layers=num_layers)
@@ -34,7 +34,7 @@ def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
     pcfg = PL.PipelineConfig(
         microbatches=M, warmup=warmup,
         compression=CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
-        remat=True)
+        remat=True, buffer_bits=buffer_bits)
     step, meta = PL.make_train_step(
         cfg, pcfg, mesh, AdamWConfig(lr=lr, warmup_steps=1,
                                      schedule="constant"),
@@ -44,9 +44,17 @@ def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
     state = {"params": params, "opt": adamw.init_opt_state(params)}
     if mode == "aqsgd":
         trunk_seq = meta["trunk_seq"]
-        state["m_out"] = jnp.zeros((2, Bg, trunk_seq, cfg.d_model),
-                                   jnp.bfloat16)
-        state["m_in"] = jnp.zeros_like(state["m_out"])
+        if buffer_bits:
+            structs = PL.buffer_structs(pcfg, 2, Bg, trunk_seq,
+                                        cfg.d_model)
+            state["m_out"] = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), structs)
+            state["m_in"] = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), structs)
+        else:
+            state["m_out"] = jnp.zeros((2, Bg, trunk_seq, cfg.d_model),
+                                       jnp.bfloat16)
+            state["m_in"] = jnp.zeros_like(state["m_out"])
     n_text = S - (cfg.num_patches or 0)
     bmb = Bg // M
     batch = {
@@ -106,6 +114,33 @@ def check_aqsgd_buffers():
     assert np.all(np.isfinite(losses)), losses
     assert losses[-1] < losses[0], losses
     print("OK aqsgd_buffers", losses)
+
+
+def check_zbit_buffers():
+    """§H.5 z-bit stored messages through the real pipeline: the fused
+    buffer codec keeps both replicas' codes bit-identical and training
+    stays finite."""
+    cfg, step, state, batch = build("gpt2-xl-paper", "aqsgd", num_layers=4,
+                                    warmup=True, lr=1e-3, buffer_bits=4)
+    key = jax.random.PRNGKey(3)
+    st, _ = step(state, batch, key)
+    assert int(jnp.sum(st["m_out"]["codes"])) > 0
+    np.testing.assert_array_equal(np.asarray(st["m_in"]["codes"])[1],
+                                  np.asarray(st["m_out"]["codes"])[0])
+    _, step2, _, _ = build("gpt2-xl-paper", "aqsgd", num_layers=4,
+                           warmup=False, lr=1e-3, buffer_bits=4)
+    losses = []
+    for i in range(3):
+        st, met = step2(st, batch, jax.random.fold_in(key, i))
+        losses.append(float(met["loss"]))
+        np.testing.assert_array_equal(
+            np.asarray(st["m_in"]["codes"])[1],
+            np.asarray(st["m_out"]["codes"])[0])
+        np.testing.assert_array_equal(
+            np.asarray(st["m_in"]["scale"])[1],
+            np.asarray(st["m_out"]["scale"])[0])
+    assert np.all(np.isfinite(losses)), losses
+    print("OK zbit_buffers", losses)
 
 
 def check_modes_all_archs():
