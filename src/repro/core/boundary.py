@@ -1,8 +1,12 @@
 """Backend-selectable AQ-SGD boundary ops — the ONE hot path.
 
-Every boundary crossing in the system (AQ-SGD sender/receiver, DirectQ,
-backward-gradient quantize, z-bit buffer codec) goes through the four
-ops below, each available on two bit-identical backends:
+Every wire crossing in the system goes through the ops below, each
+available on two bit-identical backends: the activation boundaries
+(AQ-SGD sender/receiver, DirectQ, backward-gradient quantize, z-bit
+buffer codec via `encode_delta`/`decode_accumulate`/`encode`/`decode`)
+and the data-parallel gradient wire (`encode_with_scale`/`decode_codes`
+/`decode_sum_mean` — the shared-scale compressed-allreduce codec behind
+`core.grad_compress` and `core.collectives`):
 
 * ``"pallas"``    — the fused TPU kernels in `repro.kernels.quant_pack`:
   one HBM pass per side instead of the ~6 round-trips of the unfused
@@ -131,6 +135,55 @@ def decode(packed, scale, *, bits: int, d: int, dtype=jnp.float32,
     codes = Q.unpack_codes(packed, bits, d) if bits in PACKABLE_BITS \
         else packed
     return Q.dequantize(codes, scale, bits, dtype)
+
+
+def encode_with_scale(x, scale, *, bits: int, stochastic: bool = False,
+                      key=None, noise=None, backend: str = "auto"):
+    """Quantize with a caller-supplied rowwise scale and pack: the DP
+    gradient-wire sender.  In a compressed allreduce every worker
+    quantizes against the SAME (pmax-shared) scale so that the psum of
+    codes dequantizes to the exact mean; the scale is therefore an input
+    here, never computed.  Returns packed u8 (..., pw) (raw u8 codes for
+    non-byte-aligned widths, simulation only)."""
+    backend = resolve_backend(backend, bits)
+    # clamp once for BOTH backends: the pallas kernel clamps internally,
+    # so an unclamped zero scale would NaN only the reference chain and
+    # break the bit-identity contract
+    scale = jnp.maximum(scale.astype(jnp.float32), Q._EPS)
+    u = noise if noise is not None else _noise(x.shape, stochastic, key)
+    if backend == "pallas":
+        return K.quantize_pack_scaled(x, scale, u, bits=bits)
+    codes, _ = Q.quantize(x.astype(jnp.float32), bits,
+                          stochastic=stochastic, noise=u, scale=scale)
+    return Q.pack_codes(codes, bits) if bits in PACKABLE_BITS else codes
+
+
+def decode_codes(packed, *, bits: int, d: int, backend: str = "auto"):
+    """Wire payload -> int32 codes: the accumulator form a compressed
+    allreduce ships through ``psum`` (int32 sums of b-bit codes are
+    exact in every reduction order, which is what makes the distributed
+    wire bit-identical to the single-process simulation)."""
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        return K.unpack_codes(packed, bits=bits)[..., :d]
+    codes = Q.unpack_codes(packed, bits, d) if bits in PACKABLE_BITS \
+        else packed
+    return codes.astype(jnp.int32)
+
+
+def decode_sum_mean(total, scale, *, bits: int, n: int,
+                    backend: str = "auto"):
+    """Int32 code sum over n workers + shared rowwise scale -> mean
+    values: the DP gradient-wire receiver.  n must be static (the mesh
+    size).  Association mirrors `Q.dequantize` (2T - n*lv integer-exact,
+    trailing divisions) so both backends round identically."""
+    assert isinstance(n, int) and n >= 1, n
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        return K.dequant_sum_mean(total, scale, bits=bits, n=n)
+    lv = (1 << bits) - 1
+    ic = total.astype(jnp.float32) * 2.0 - float(n * lv)
+    return ((ic * scale) / lv) / n
 
 
 def roundtrip(x, *, bits: int, stochastic: bool = False, key=None,

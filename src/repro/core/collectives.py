@@ -1,47 +1,105 @@
 """Quantized collectives for data-parallel gradient averaging.
 
 The paper's Fig. 5 compresses *model gradients* on the DP axis
-(QuantizedAdam).  Inside shard_map the natural wire form is:
+(QuantizedAdam).  Inside shard_map the wire form is:
 
     s      = pmax(rowwise absmax)          (tiny, fp32)
-    codes  = quantize(x, shared scale s)   (b-bit, stochastic)
-    sum    = psum(codes as int32)          (wire: b-bit payload*)
-    mean   = dequantize(sum) / n_devices
+    packed = encode_with_scale(x, s)       (b-bit packed payload)
+    sum    = psum(int32 codes)             (wire: b-bit payload*)
+    mean   = decode_sum_mean(sum, s, n)
 
 Quantization is linear given a *shared* scale, so psum-of-codes
-dequantizes to the exact mean of the quantized values — this is the
-classic compressed-allreduce construction.  (*The HLO psum carries i32
-lanes; a bandwidth-optimal ring implementation exchanges the b-bit codes
-and accumulates locally — the wire accounting in benchmarks uses the
-b-bit payload, the dry-run's i32 psum is the conservative bound.)
+dequantizes to the exact mean of the quantized values — the classic
+compressed-allreduce construction.  (*The HLO psum carries i32 lanes; a
+bandwidth-optimal ring implementation exchanges the b-bit codes and
+accumulates locally — the wire accounting in benchmarks uses the b-bit
+payload, the dry-run's i32 psum is the conservative bound.  The
+pack→unpack round trip below is kept on-device on purpose: the packed
+bytes are the shippable payload and the bit-exactness anchor the
+parity tests pin; a future ring keeps the pack and folds the unpack
+into its accumulate step.)
 
-Combine with error feedback (core.grad_compress) at the call site.
+Every quantize/pack/unpack step routes through `core.boundary`, the
+backend-selectable fused codec (`encode_with_scale` / `decode_codes` /
+`decode_sum_mean`), never the unfused jnp chain.  `ef_psum_mean_bucket`
+adds QuantizedAdam-style error feedback over the bucketed gradient of
+`core.grad_compress` — it is the distributed twin of
+`grad_compress.compress_allreduce` and matches it bit-for-bit (int32
+code sums are reduction-order exact, f32 pmax is order-independent).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import boundary as B
+from repro.core import grad_compress as GC
 from repro.core import quantization as Q
+from repro.core.quantization import _EPS
+
+
+def _axis_tuple(axis_name):
+    return axis_name if isinstance(axis_name, (tuple, list)) \
+        else (axis_name,)
+
+
+def _fold_axis_index(key, axis_name):
+    """Per-device noise key: fold_in the FLAT row-major rank along the
+    (possibly compound) DP axis — the same index
+    `grad_compress.worker_key` folds for simulated worker i, so
+    simulation and wire draw identical noise on any mesh shape."""
+    axes = _axis_tuple(axis_name)
+    flat = jax.lax.axis_index(axes[0])
+    for ax in axes[1:]:
+        flat = flat * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return jax.random.fold_in(key, flat)
 
 
 def quantized_psum_mean(x, axis_name: str, bits: int, key,
-                        stochastic: bool = True):
+                        stochastic: bool = True, *,
+                        backend: str = "auto"):
     """Mean of x over `axis_name` with b-bit quantized payload.
 
     x: (..., d) float; returns f32 of the same shape.  Must be called
-    inside shard_map over `axis_name`."""
+    inside shard_map over `axis_name`.  (``psum(1)`` of a Python scalar
+    resolves statically from the axis env, so the fused receiver kernel
+    gets the device count at trace time and it can never disagree with
+    the mesh.)"""
     n = jax.lax.psum(1, axis_name)
     xf = x.astype(jnp.float32)
     local_s = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    s = jnp.maximum(jax.lax.pmax(local_s, axis_name), 1e-12)
-    codes, _ = Q.quantize(xf, bits, stochastic=stochastic, key=key,
-                          scale=s)
-    total = jax.lax.psum(codes.astype(jnp.int32), axis_name)
-    levels = (1 << bits) - 1
-    # sum of dequantized values: sum_i (c_i * 2/L - 1) * s
-    mean = (total.astype(jnp.float32) * (2.0 / levels) - n) * s / n
-    return mean
+    s = jnp.maximum(jax.lax.pmax(local_s, axis_name), _EPS)
+    packed = B.encode_with_scale(xf, s, bits=bits, stochastic=stochastic,
+                                 key=key, backend=backend)
+    codes = B.decode_codes(packed, bits=bits, d=x.shape[-1],
+                           backend=backend)
+    total = jax.lax.psum(codes, axis_name)
+    return B.decode_sum_mean(total, s, bits=bits, n=n, backend=backend)
+
+
+def ef_psum_mean_bucket(v_grad, err, axis_name, bits: int, key,
+                        *, stochastic: bool = True,
+                        backend: str = "auto"):
+    """Error-feedback compressed allreduce of one gradient bucket.
+
+    v_grad, err: (rows, group_d) f32 — this device's gradient bucket
+    (`grad_compress.flatten_bucket`) and carried error.  Returns
+    (mean bucket, new error).  Must run inside shard_map over
+    `axis_name`; the worker count comes from the axis env itself.
+
+    The noise key is folded by axis position internally, so callers pass
+    the same base key on every device."""
+    n = jax.lax.psum(1, axis_name)
+    v = v_grad.astype(jnp.float32) + err
+    s = jnp.maximum(jax.lax.pmax(GC.local_scale(v), axis_name), _EPS)
+    packed, new_err = GC.ef_encode(
+        v, s, bits, _fold_axis_index(key, axis_name),
+        stochastic=stochastic, backend=backend)
+    codes = B.decode_codes(packed, bits=bits, d=v.shape[-1],
+                           backend=backend)
+    total = jax.lax.psum(codes, axis_name)
+    mean = B.decode_sum_mean(total, s, bits=bits, n=n, backend=backend)
+    return mean, new_err
 
 
 def psum_wire_bytes(shape, bits: int) -> int:

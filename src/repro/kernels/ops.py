@@ -92,6 +92,43 @@ def unpack_dequant(packed, scale, *, bits: int, out_dtype=jnp.float32,
     return out[:r].reshape(*shape[:-1], out.shape[-1])
 
 
+def quantize_pack_scaled(x, s, u=None, *, bits: int, block_r: int = 128):
+    """Fused quantize-with-given-scale -> pack for any (..., d) tensor:
+    the DP gradient-wire sender (scale is the pmax-shared rowwise scale
+    of a compressed allreduce, so it is an input, not computed here)."""
+    shape = x.shape
+    d = shape[-1]
+    x2, r = _as_rows(x, d, block_r)
+    s2, _ = _as_rows(s, 1, block_r)
+    u2 = None if u is None else _as_rows(u, d, block_r)[0]
+    packed = _qp.quantize_pack_scaled(x2, s2, u2, bits=bits,
+                                      block_r=block_r, interpret=INTERPRET)
+    return packed[:r].reshape(*shape[:-1], -1)
+
+
+def unpack_codes(packed, *, bits: int, block_r: int = 128):
+    """Fused unpack to int32 codes for any (..., pw) payload — the
+    code-domain form the gradient wire accumulates with ``psum``."""
+    shape = packed.shape
+    p2, r = _as_rows(packed, shape[-1], block_r)
+    out = _qp.unpack_codes(p2, bits=bits, block_r=block_r,
+                           interpret=INTERPRET)
+    return out[:r].reshape(*shape[:-1], out.shape[-1])
+
+
+def dequant_sum_mean(total, s, *, bits: int, n: int, block_r: int = 128):
+    """Fused int32-code-sum -> mean values for any (..., d) sum tensor:
+    the DP gradient-wire receiver (padded rows carry zero scales and are
+    sliced off, so ragged gradient buckets are safe)."""
+    shape = total.shape
+    d = shape[-1]
+    t2, r = _as_rows(total, d, block_r)
+    s2, _ = _as_rows(s, 1, block_r)
+    out = _qp.dequant_sum_mean(t2, s2, bits=bits, n=n, block_r=block_r,
+                               interpret=INTERPRET)
+    return out[:r].reshape(shape)
+
+
 def flash_attention(q, k, v, **kw):
     """(B, H, Sq, hd) x (B, Hk, Sk, hd) -> (B, H, Sq, hd)."""
     kw.setdefault("interpret", INTERPRET)

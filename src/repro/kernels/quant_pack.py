@@ -15,6 +15,18 @@ Four fused ops cover every boundary crossing in the pipeline:
                                  quantize, and z-bit buffer writes;
 * ``unpack_dequant``           — the matching receiver / buffer read.
 
+Three further variants carry the data-parallel *gradient* wire
+(core.grad_compress / core.collectives — the paper's Fig. 5
+"end-to-end communication compression"):
+
+* ``quantize_pack_scaled``     — quantize with a caller-supplied rowwise
+                                 scale (the pmax-shared scale of a
+                                 compressed allreduce) and pack;
+* ``unpack_codes``             — unpack the wire payload to int32 codes
+                                 (the code-domain ``psum`` accumulator);
+* ``dequant_sum_mean``         — turn the int32 code *sum* over n
+                                 workers back into the mean gradient.
+
 Stochastic rounding takes the uniform noise tensor as an explicit kernel
 input rather than seeding the on-core PRNG (pltpu.prng_random_bits): the
 reference jnp backend consumes the *same* noise, which is what makes the
@@ -245,7 +257,6 @@ def quantize_pack(x, u=None, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
         interpret=interpret,
     )(*args)
 
-
 def _ud_kernel(packed_ref, scale_ref, out_ref, *, bits: int):
     codes = _unpack(packed_ref[...], bits)
     out_ref[...] = _dequant(codes, scale_ref[...], bits
@@ -277,3 +288,117 @@ def unpack_dequant(packed, scale, *, bits: int, out_dtype=jnp.float32,
         out_shape=jax.ShapeDtypeStruct((r, d), jnp.dtype(out_dtype)),
         interpret=interpret,
     )(packed, scale)
+
+
+# ---------------------------------------------------------------------------
+# DP gradient wire: shared-scale quantize, code-domain psum, sum -> mean
+# ---------------------------------------------------------------------------
+
+def _qps_kernel(x_ref, s_ref, *rest, bits: int, stochastic: bool):
+    if stochastic:
+        u_ref, packed_ref = rest
+        u = u_ref[...]
+    else:
+        (packed_ref,) = rest
+        u = None
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(s_ref[...].astype(jnp.float32), _EPS)
+    packed_ref[...] = _pack(_quant_codes(x, scale, bits, u), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r",
+                                             "interpret"))
+def quantize_pack_scaled(x, s, u=None, *, bits: int,
+                         block_r: int = DEFAULT_BLOCK_R,
+                         interpret: bool = True):
+    """x: (R, d) values, s: (R, 1) caller-supplied rowwise scale (e.g. the
+    pmax-shared scale of a compressed allreduce); u: optional uniform
+    noise (R, d).  Returns packed (R, d//(8/bits)) u8 — one fused pass
+    for the error-feedback gradient sender."""
+    assert bits in (2, 4, 8), bits
+    r, d = x.shape
+    k = 8 // bits
+    assert d % k == 0, (d, bits)
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    in_specs = [row_spec, pl.BlockSpec((br, 1), lambda i: (i, 0))]
+    args = [x, s]
+    if u is not None:
+        in_specs.append(row_spec)
+        args.append(u)
+    return pl.pallas_call(
+        functools.partial(_qps_kernel, bits=bits, stochastic=u is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, d // k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d // k), jnp.uint8),
+        interpret=interpret,
+    )(*args)
+
+
+def _uc_kernel(packed_ref, out_ref, *, bits: int):
+    out_ref[...] = _unpack(packed_ref[...], bits).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r",
+                                             "interpret"))
+def unpack_codes(packed, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
+                 interpret: bool = True):
+    """packed (R, pw) u8 -> (R, pw * 8/bits) int32 codes: the code-domain
+    form a compressed allreduce accumulates with ``psum`` (int32 sums of
+    b-bit codes are exact in any reduction order)."""
+    assert bits in (2, 4, 8), bits
+    r, pw = packed.shape
+    k = 8 // bits
+    d = pw * k
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_uc_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, pw), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.int32),
+        interpret=interpret,
+    )(packed)
+
+
+def _dsm_kernel(total_ref, s_ref, out_ref, *, bits: int, n: int):
+    # mean of n dequantized code tensors, given their exact int32 sum:
+    #   sum_i ((2 c_i - lv) s) / lv = ((2 T - n lv) s) / lv
+    # 2T - n*lv is integer-exact in f32 and the trailing divisions block
+    # FMA contraction — same association as _dequant, so the reference
+    # chain and this kernel round identically (the parity contract).
+    lv = _levels(bits)
+    ic = total_ref[...].astype(jnp.float32) * 2.0 - float(n * lv)
+    out_ref[...] = ((ic * s_ref[...]) / lv) / n
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "block_r",
+                                             "interpret"))
+def dequant_sum_mean(total, s, *, bits: int, n: int,
+                     block_r: int = DEFAULT_BLOCK_R,
+                     interpret: bool = True):
+    """total (R, d) int32 code sum over n workers, s (R, 1) shared scale.
+    Returns the mean gradient (R, d) f32 — the receiver side of the
+    compressed DP allreduce."""
+    assert bits in (2, 4, 8), bits
+    assert isinstance(n, int) and n >= 1, n
+    r, d = total.shape
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_dsm_kernel, bits=bits, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(total, s)

@@ -74,6 +74,34 @@ def dequant_unpack_accumulate_ref(packed, scale, m, bits: int):
     return m.astype(jnp.float32) + _dequant_ref(codes, scale, bits)
 
 
+def quantize_pack_scaled_ref(x, s, bits: int, u=None):
+    """DP-gradient sender side: quantize with the caller-supplied
+    (pmax-shared) rowwise scale, then pack.  Returns packed u8 only —
+    the scale already lives on every worker."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(s.astype(jnp.float32), _EPS)
+    return _pack_ref(_codes_ref(x, scale, bits, u), bits)
+
+
+def unpack_codes_ref(packed, bits: int):
+    """Wire payload -> int32 codes (the psum accumulator form)."""
+    k = 8 // bits
+    levels = (1 << bits) - 1
+    shifts = jnp.arange(k, dtype=jnp.uint32) * bits
+    vals = (packed[..., None].astype(jnp.uint32) >> shifts) \
+        & jnp.uint32(levels)
+    return vals.reshape(packed.shape[0], -1).astype(jnp.int32)
+
+
+def dequant_sum_mean_ref(total, s, bits: int, n: int):
+    """Int32 code sum over n workers + shared scale -> mean gradient.
+    Same association as _dequant_ref (2T - n*lv exact, trailing
+    divisions) so the oracle is FMA-contraction-proof too."""
+    levels = (1 << bits) - 1
+    ic = total.astype(jnp.float32) * 2.0 - float(n * levels)
+    return ((ic * s) / levels) / n
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=10 ** 9,
                         softcap=0.0):
     """Dense attention oracle.  q,k,v: (B, H, S, hd) (head-major)."""

@@ -29,6 +29,12 @@ def main():
     ap.add_argument("--fw-bits", type=int, default=4)
     ap.add_argument("--bw-bits", type=int, default=8)
     ap.add_argument("--buffer-bits", type=int, default=0)
+    ap.add_argument("--dp-grad-bits", type=int, default=0,
+                    help="b-bit error-feedback gradient compression on "
+                         "the DP axis (0 = off; Fig. 5 end-to-end mode)")
+    ap.add_argument("--dp-workers", type=int, default=2,
+                    help="simulated DP degree for --dp-grad-bits in the "
+                         "single-host trainer")
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -67,7 +73,10 @@ def main():
     if not args.distributed:
         from repro.training import simulated as sim
         tcfg = sim.SimTrainConfig(num_stages=args.stages, compression=cc,
-                                  optimizer=opt)
+                                  optimizer=opt,
+                                  dp_grad_bits=args.dp_grad_bits,
+                                  dp_workers=args.dp_workers
+                                  if args.dp_grad_bits else 1)
         state, losses = sim.train(cfg, tcfg, ds, num_steps=args.steps,
                                   batch_size=args.batch, log_every=10)
         print(f"final loss {np.mean(losses[-5:]):.4f}")
@@ -84,14 +93,16 @@ def main():
 
     mesh = make_debug_mesh(args.data_par, args.stages)
     pcfg = PL.PipelineConfig(microbatches=args.microbatches,
-                             compression=cc, warmup=True)
+                             compression=cc, warmup=True,
+                             dp_grad_bits=args.dp_grad_bits)
     gb = args.batch
     step_w, meta = PL.make_train_step(cfg, pcfg, mesh, opt,
                                       global_batch=gb, seq_len=args.seq,
                                       buffer_samples=args.samples
                                       // args.data_par)
     pcfg2 = PL.PipelineConfig(microbatches=args.microbatches,
-                              compression=cc, warmup=False)
+                              compression=cc, warmup=False,
+                              dp_grad_bits=args.dp_grad_bits)
     step_c, _ = PL.make_train_step(cfg, pcfg2, mesh, opt,
                                    global_batch=gb, seq_len=args.seq,
                                    buffer_samples=args.samples
@@ -99,6 +110,8 @@ def main():
     params = PL.to_pipeline_params(
         cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), args.stages)
     state = {"params": params, "opt": adamw.init_opt_state(params)}
+    if args.dp_grad_bits:
+        state["dp_error"] = PL.init_dp_error(pcfg, params, args.data_par)
     if cc.mode == "aqsgd":
         n_loc = args.samples // args.data_par
         bshape = (args.stages, args.data_par * n_loc, args.seq, cfg.d_model)

@@ -18,6 +18,24 @@ pipeline automatically; the boundary transfer is a ``custom_vjp`` so that
 i.e. the lowered ``collective-permute`` ops genuinely carry 2-8 bit
 payloads — the compression shows up in the §Roofline collective term.
 
+DP gradient wire (``dp_grad_bits > 0``, paper Fig. 5 "end-to-end
+communication compression"): the whole gradient tree is flattened into
+one bucketed (rows, group_d) array and allreduced over the DP axes
+through `core.collectives.ef_psum_mean_bucket` — pmax-shared rowwise
+scales, fused quantize-pack, int32 code-domain ``psum``, fused
+dequant-mean — with per-rank error-feedback state (``dp_error`` in the
+train state, sharded one bucket per DP rank).  The wire FUNCTION is
+bit-identical to the simulator's `grad_compress.compress_allreduce`
+(tests/workers/dp_grad_worker.py feeds both distinct per-rank buckets
+and compares bit-for-bit).  Placement caveat: in THIS train step the
+bucket each rank feeds in is the gradient `jax.value_and_grad` already
+produced at the pjit level — which includes XLA's fp32 cross-data
+reduction — so the collective here performs n independent stochastic
+quantizations of the shared gradient with per-rank error feedback (the
+pure-DP / pod-axis semantics), rather than compressing per-rank partial
+gradients.  Moving the quantizer under the autodiff reduction so the
+fp32 allreduce leaves the hot path entirely is a ROADMAP item.
+
 Message buffers: each device holds ``m_out`` (its outgoing boundary) and
 ``m_in`` (a replica of the upstream stage's buffer).  Both sides apply
 the *same* quantized delta so they stay bit-identical (Algorithm 2).  The
@@ -43,6 +61,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import boundary as B
+from repro.core import collectives as C
+from repro.core import grad_compress as GC
 from repro.core import quantization as Q
 from repro.core.aqsgd import CompressionConfig
 from repro.launch.mesh import data_axes, shard_map
@@ -64,6 +84,9 @@ class PipelineConfig:
     buffer_bits: int = 0            # 0 = raw dtype; 2/4/8 = z-bit stored
                                     # messages (paper §H.5) + f32 scales
     loss_chunks: int = 64           # sequential CE chunks (bounds logits mem)
+    dp_grad_bits: int = 0           # Fig. 5: b-bit error-feedback gradient
+                                    # compression on the DP axis (0 = off)
+    dp_grad_group: int = GC.DEFAULT_GROUP_D  # gradient-bucket group width
     moe_mode: str = "zero3"         # zero3 | expert_parallel (§Perf)
     remat_mode: str = "nested"      # nested | layer (§Perf: nested saves
                                     # HBM, layer saves one fwd recompute)
@@ -319,6 +342,51 @@ def make_transfer(mode: str, fw_bits: int, bw_bits: int, stochastic: bool,
 
     transfer.defvjp(transfer_fwd, transfer_bwd)
     return transfer
+
+
+# ---------------------------------------------------------------------------
+# DP gradient wire (error-feedback compressed allreduce, paper Fig. 5)
+# ---------------------------------------------------------------------------
+
+def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
+    """shard_map'd compressed gradient allreduce over the DP axes.
+
+    The gradient tree is flattened into one (rows, group_d) bucket
+    (`core.grad_compress.bucket_layout`) which every device holds in
+    full; the wire (`core.collectives.ef_psum_mean_bucket`) pmax-shares
+    the rowwise scale, quantizes through the fused boundary codec, and
+    psum-accumulates int32 codes over the DP axes.  Error-feedback state
+    is per DP rank: a (D, rows, group_d) array sharded over the data
+    axes so each device carries exactly its own feedback bucket.
+
+    Noise keys fold in the device's DP position, so ranks draw
+    independent rounding noise and the allreduce is a genuine n-worker
+    compressed mean — bit-identical to
+    `grad_compress.compress_allreduce` with the same base key and the
+    same per-rank inputs.  (In `make_train_step` the input bucket is the
+    pjit-level gradient, already reduced over data by autodiff — see the
+    module docstring's placement caveat.)"""
+    daxes = data_axes(mesh)
+    axis = daxes if len(daxes) > 1 else daxes[0]
+
+    def wire(g2d, err, key):
+        mean, new_err = C.ef_psum_mean_bucket(
+            g2d, err[0], axis, pcfg.dp_grad_bits, key,
+            stochastic=cc.stochastic, backend=cc.backend)
+        return mean, new_err[None]
+
+    return shard_map(wire, mesh,
+                     (P(None, None), P(axis, None, None), P()),
+                     (P(None, None), P(axis, None, None)))
+
+
+def init_dp_error(pcfg: "PipelineConfig", params, n_ranks: int):
+    """Initial per-rank error-feedback stack (n_ranks, rows, group_d) —
+    the one place that ties the stack depth to the mesh's DP product and
+    the bucket width to `pcfg.dp_grad_group`, so callers cannot drift
+    from the layout `make_train_step` traces against."""
+    err = GC.init_error_state(params, pcfg.dp_grad_group)
+    return jnp.stack([err] * n_ranks)
 
 
 # ---------------------------------------------------------------------------
@@ -606,6 +674,9 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     pipeline_fn = make_pipeline_fn(cfg, pcfg, lay, layer_dims, shared_dims,
                                    exp_axes, Df)
     flags = layer_flags(cfg, lay, trunk_seq)
+    if pcfg.dp_grad_bits:
+        glayout = GC.bucket_layout(params_shape, pcfg.dp_grad_group)
+        dp_wire = make_dp_grad_wire(mesh, pcfg, cc)
 
     # ---- shard_map specs -------------------------------------------------
     def _stage_pspec(leaf):
@@ -714,9 +785,16 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
 
         (loss, (nmo, nmi)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
+        if pcfg.dp_grad_bits:
+            bucket = GC.flatten_bucket(grads, glayout)
+            mean, new_dp_err = dp_wire(bucket, state["dp_error"],
+                                       jax.random.fold_in(key, 977))
+            grads = GC.unflatten_bucket(mean, glayout, grads)
         new_params, new_opt = adamw.apply_updates(
             opt_cfg, params, grads, state["opt"])
         new_state = {"params": new_params, "opt": new_opt}
+        if pcfg.dp_grad_bits:
+            new_state["dp_error"] = new_dp_err
         if has_bufs:
             new_state["m_out"] = nmo
             new_state["m_in"] = nmi
@@ -736,6 +814,8 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     opt_specs = {"mu": moment_specs, "nu": moment_specs,
                  "step": NamedSharding(mesh, P())}
     state_specs = {"params": pspecs, "opt": opt_specs}
+    if pcfg.dp_grad_bits:
+        state_specs["dp_error"] = NamedSharding(mesh, P(d_ax, None, None))
     if has_bufs:
         bspec = NamedSharding(mesh, P("model", d_ax, None, None))
         if pcfg.buffer_bits:
@@ -787,6 +867,13 @@ def make_state_structs(cfg: ModelConfig, pcfg: PipelineConfig, meta,
     opt = {"mu": moments, "nu": moments,
            "step": jax.ShapeDtypeStruct((), jnp.int32)}
     state = {"params": params, "opt": opt}
+    if pcfg.dp_grad_bits:
+        daxes = data_axes(mesh)
+        D = int(np.prod([mesh.shape[a] for a in daxes]))
+        glayout = GC.bucket_layout(meta["params_shape"],
+                                   pcfg.dp_grad_group)
+        state["dp_error"] = jax.ShapeDtypeStruct(
+            (D, glayout.rows, glayout.group_d), jnp.float32)
     if pcfg.compression.mode == "aqsgd":
         K = mesh.shape["model"]
         daxes = data_axes(mesh)

@@ -17,6 +17,15 @@ is selected by ``CompressionConfig.backend`` and flows through
 backends are bit-identical per op (see core.boundary), so convergence
 results measured here transfer across backends up to the usual
 compiler-fusion ulp noise in the surrounding model compute.
+
+DP gradient compression (Fig. 5, ``dp_grad_bits > 0``) uses the bucketed
+error-feedback codec of `core.grad_compress`: each simulated worker's
+gradient tree is flattened into one (rows, group_d) bucket, quantized
+against the cross-worker shared scale through the fused boundary codec,
+and accumulated as int32 codes — the identical math the shard_map
+pipeline's `core.collectives.ef_psum_mean_bucket` wire executes, so this
+simulation is bit-faithful to the distributed gradient wire (int32 code
+sums are exact in any reduction order).
 """
 from __future__ import annotations
 
@@ -43,6 +52,7 @@ class SimTrainConfig:
     # Fig. 5: error-feedback compression of model gradients on the DP axis
     dp_grad_bits: int = 0           # 0 = off
     dp_workers: int = 1             # simulated DP degree when dp_grad_bits>0
+    dp_grad_group: int = grad_compress.DEFAULT_GROUP_D  # scale-group width
     remat: bool = False
 
 
@@ -57,8 +67,8 @@ def init_train_state(mcfg: ModelConfig, tcfg: SimTrainConfig,
             mcfg.d_model),
     }
     if tcfg.dp_grad_bits:
-        state["dp_error"] = [grad_compress.init_error_state(params)
-                             for _ in range(tcfg.dp_workers)]
+        err = grad_compress.init_error_state(params, tcfg.dp_grad_group)
+        state["dp_error"] = jnp.stack([err] * tcfg.dp_workers)
     return state
 
 
@@ -98,12 +108,14 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
                                         seen_all, key), has_aux=True)
 
     if tcfg.dp_grad_bits and tcfg.dp_workers > 1:
-        # Fig. 5 mode: split the batch over simulated DP workers, compress
-        # each worker's model gradient with error feedback, average.
+        # Fig. 5 mode: split the batch over simulated DP workers, then
+        # run the bucketed error-feedback compressed allreduce over the
+        # per-worker gradient trees — bit-faithful to the shard_map wire
+        # (core.collectives.ef_psum_mean_bucket).
         w = tcfg.dp_workers
         b = batch["tokens"].shape[0] // w
-        gsum, loss = None, 0.0
-        new_err, new_ms_parts, ce = [], [], 0.0
+        glist, loss = [], 0.0
+        new_ms_parts, ce = [], 0.0
         for i in range(w):
             sub = {k: v[i * b:(i + 1) * b] for k, v in batch.items()}
             sub_m = [m[:, i * b:(i + 1) * b] if m.ndim > 3 else
@@ -115,15 +127,15 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
                     p, mcfg, tcfg, sub, sub_m, sub_s,
                     jax.random.fold_in(key, 1000 + i)), has_aux=True)(
                         state["params"])
-            gq, ne = grad_compress.compress_gradients(
-                g, state["dp_error"][i], tcfg.dp_grad_bits,
-                jax.random.fold_in(key, 2000 + i))
-            new_err.append(ne)
-            gsum = gq if gsum is None else jax.tree.map(jnp.add, gsum, gq)
+            glist.append(g)
             loss = loss + l / w
             ce = ce + met["ce"] / w
             new_ms_parts.append(met["boundary_state"])
-        grads = jax.tree.map(lambda x: x / w, gsum)
+        grads, new_err = grad_compress.compress_allreduce(
+            glist, state["dp_error"], tcfg.dp_grad_bits,
+            jax.random.fold_in(key, 2000), backend=cc.backend,
+            layout=grad_compress.bucket_layout(glist[0],
+                                               tcfg.dp_grad_group))
         new_state_extra = {"dp_error": new_err}
         if cc.mode == "aqsgd":
             # workers own disjoint batch shards; concat their new messages
@@ -134,6 +146,15 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
         else:
             bstate = ()
         metrics = {"ce": ce, "aux": 0.0, "boundary_state": bstate}
+    elif tcfg.dp_grad_bits:
+        # single-worker error feedback: the n=1 wire (quantize,
+        # dequantize, carry the error) through the same bucketed codec.
+        (loss, metrics), grads = grad_fn(state["params"])
+        grads, new_err = grad_compress.compress_gradients(
+            grads, state["dp_error"][0], tcfg.dp_grad_bits,
+            jax.random.fold_in(key, 2000), backend=cc.backend,
+            layout=grad_compress.bucket_layout(grads, tcfg.dp_grad_group))
+        new_state_extra = {"dp_error": new_err[None]}
     else:
         (loss, metrics), grads = grad_fn(state["params"])
         new_state_extra = {}

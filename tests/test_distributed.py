@@ -24,7 +24,7 @@ def run_worker(script, arg, timeout=1500):
 
 @pytest.mark.parametrize("check", [
     "fp32_equivalence", "aqsgd_buffers", "zbit_buffers",
-    "modes_all_archs", "expert_parallel"])
+    "modes_all_archs", "expert_parallel", "dp_grad_pipeline"])
 def test_pipeline(check):
     out = run_worker("pipeline_worker.py", check)
     assert f"OK {check}" in out or "OK" in out
@@ -34,6 +34,14 @@ def test_quantized_psum_mean():
     """b-bit compressed allreduce: replica-consistent and unbiased."""
     out = run_worker("collectives_worker.py", "run")
     assert "OK collectives" in out
+
+
+def test_dp_grad_wire_matches_simulation():
+    """The error-feedback compressed DP gradient wire over 2 devices
+    (pmax scale + int32 code psum through the fused codec) matches
+    `grad_compress.compress_allreduce` bit-for-bit, both backends."""
+    out = run_worker("dp_grad_worker.py", "run")
+    assert "OK dp_grad" in out
 
 
 def test_moe_expert_parallel_numerics():

@@ -1,0 +1,96 @@
+"""Subprocess worker: the compressed DP gradient wire on host devices.
+
+The shard_map wire (`core.collectives.ef_psum_mean_bucket`: pmax-shared
+scale, fused quantize-pack, int32 code psum, fused dequant-mean, carried
+error) must match the single-process simulation
+(`core.grad_compress.compress_allreduce`) BIT-FOR-BIT given the same
+base key: the shared scale is an order-independent f32 max and the code
+accumulation is an exact int32 sum, so reduction order cannot introduce
+drift.  Checked over multiple steps (the error state telescopes through
+the wire), on both codec backends, on a single DP axis (2 ranks) AND on
+a compound pod x data axis (2 x 2 ranks — the flat row-major rank must
+drive the noise keys, `collectives._fold_axis_index`).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as C
+from repro.core import grad_compress as GC
+from repro.launch.mesh import make_mesh_auto, shard_map
+
+GROUP = 128
+MESHES = [((2,), ("d",), "d"), ((2, 2), ("p", "d"), ("p", "d"))]
+
+
+def _trees(step, w):
+    ks = jax.random.split(jax.random.PRNGKey(100 + step), w)
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"w": jax.random.normal(k1, (57, 33)),
+                "b": jax.random.normal(k2, (19,)),
+                "s": jax.random.normal(k3, (4096, 2)) * 0.3}
+    return [one(k) for k in ks]
+
+
+def run_case(shape, axes, wire_axis, bits, backend):
+    w = int(np.prod(shape))
+    mesh = make_mesh_auto(shape, axes)
+    lay = GC.bucket_layout(_trees(0, w)[0], GROUP)
+    spec = P(axes if len(axes) > 1 else axes[0])
+
+    def wire_fn(v, err, key):
+        mean, new_err = C.ef_psum_mean_bucket(
+            v[0], err[0], wire_axis, bits, key,
+            stochastic=True, backend=backend)
+        return mean[None], new_err[None]
+
+    wire = jax.jit(shard_map(wire_fn, mesh, (spec, spec, P()),
+                             (spec, spec)))
+
+    @jax.jit
+    def sim(trees, err, key):
+        return GC.compress_allreduce(trees, err, bits, key,
+                                     stochastic=True, backend=backend,
+                                     layout=lay)
+
+    err_w = jnp.zeros((w, lay.rows, lay.group_d))
+    err_s = jnp.zeros((w, lay.rows, lay.group_d))
+    for step in range(3):
+        trees = _trees(step, w)
+        v = jnp.stack([GC.flatten_bucket(t, lay) for t in trees])
+        key = jax.random.fold_in(jax.random.PRNGKey(7), step)
+        means, err_w = wire(v, err_w, key)
+        mean_s, err_s = sim(trees, err_s, key)
+        # all DP ranks hold the same allreduced mean
+        for r in range(1, w):
+            np.testing.assert_array_equal(np.asarray(means[0]),
+                                          np.asarray(means[r]))
+        # wire == simulation, bit-for-bit: mean and error state.
+        # (Only the live bucket region: the zero-pad tail holds
+        # harmless nonzero dequant values on the wire — quantize(0) != 0
+        # under a shared scale — and is dropped by unflatten_bucket
+        # before touching the optimizer.)
+        live_w = np.asarray(means[0]).reshape(-1)[:lay.total]
+        live_s = np.asarray(GC.flatten_bucket(mean_s, lay)
+                            ).reshape(-1)[:lay.total]
+        np.testing.assert_array_equal(live_w, live_s)
+        np.testing.assert_array_equal(np.asarray(err_w),
+                                      np.asarray(err_s))
+
+
+def main():
+    for shape, axes, wire_axis in MESHES:
+        for bits in (4, 8):
+            for backend in ("reference", "pallas"):
+                run_case(shape, axes, wire_axis, bits, backend)
+                print(f"OK mesh={shape} bits={bits} backend={backend}")
+    print("OK dp_grad")
+
+
+if __name__ == "__main__":
+    main()
