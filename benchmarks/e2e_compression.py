@@ -9,13 +9,16 @@ activation-only compression (paper: up to 8.5x at 100 Mbps).
 
 The gradient wire measured here is the real fused path: the simulated
 trainer routes ``dp_grad_bits`` through the bucketed error-feedback
-codec of `core.grad_compress` (shared-scale fused quantize-pack, int32
-code accumulation, fused dequant-mean) — bit-identical to the shard_map
-pipeline's `core.collectives.ef_psum_mean_bucket` wire, so these
-convergence curves ARE the distributed system's curves.  Wire bytes in
-the throughput model use the bucketed accounting
-(`grad_compress.grad_wire_bytes`: one f32 scale per group_d elements,
-never one per tiny leaf row).
+codec of `core.grad_compress` (shared-scale fused codes-only quantize,
+int32 code accumulation, fused dequant-mean) — bit-identical to BOTH
+shard_map wires (`core.collectives.ef_psum_mean_bucket` and the
+bandwidth-optimal `ring_ef_reduce_mean_bucket`), so these convergence
+curves ARE the distributed system's curves for either ``--dp-wire``.
+Wire bytes in the throughput model are reported per wire: ``psum`` is
+the i32-lane collective at the same ring-allreduce physical convention
+as the fp32 row, ``ring`` is the exact packed-payload accounting of
+`collectives.ring_wire_bytes` (the same formula tests/test_hlo_cost.py
+pins against the traced HLO).
 
 ``--tiny --json out.json`` is the CI smoke configuration: fewer steps,
 machine-readable output uploaded as a nightly artifact alongside the
@@ -30,6 +33,7 @@ from benchmarks.common import finetune, tail_loss, write_csv
 from benchmarks.throughput_model import (BANDWIDTHS, CFG, MACRO,
                                          throughput_seqs_per_s, _N)
 from repro.core.aqsgd import CompressionConfig
+from repro.core import collectives as C
 from repro.core import grad_compress as GC
 from repro.models import model as Mo
 
@@ -61,14 +65,25 @@ def main(steps: int = 50, tiny: bool = False,
     write_csv("e2e_compression.csv", "method,final_loss", rows)
 
     # throughput: add the DP gradient allreduce wire to the model.
-    # model gradient bytes per worker per step (ring allreduce ~ 2x size);
-    # the compressed wire uses the real bucketed accounting (packed
-    # payload + one f32 scale per group).
+    # All rows use the same PHYSICAL per-worker convention: an i32/f32
+    # allreduce rides a ring shipping ~2x its operand bytes (the fp32
+    # row and the i32-lane "psum" wire both get that factor), while the
+    # compressed ring's model (`collectives.ring_wire_bytes`: b-bit
+    # code segments + packed code sums + f32 scale pmax, pinned to the
+    # traced HLO by test_hlo_cost) already counts its 2(N-1) hops.
     params_shape = jax.eval_shape(
         lambda: Mo.init_params(CFG, jax.random.PRNGKey(0)))
+    dp_workers = 2
+    lay = GC.bucket_layout(params_shape)
+    bucket = (lay.rows, lay.group_d)
     grad_fp32 = _N * 4 * 2
-    grad_q4 = GC.grad_wire_bytes(params_shape, 4) * 2
-    results["grad_wire_bytes"] = {"fp32": grad_fp32, "q4": grad_q4}
+    grad_wire = {
+        "psum": (lay.rows * lay.group_d * 4 + lay.rows * 4) * 2,
+        "ring": C.ring_wire_bytes(bucket, 4, n=dp_workers),
+    }
+    results["grad_wire_bytes"] = {"fp32": grad_fp32,
+                                  "q4_psum": grad_wire["psum"],
+                                  "q4_ring": grad_wire["ring"]}
     trows = []
     for bname, bw in BANDWIDTHS.items():
         def step_time(cc, gbytes):
@@ -78,18 +93,24 @@ def main(steps: int = 50, tiny: bool = False,
         t_fp = step_time(CompressionConfig(mode="fp32"), grad_fp32)
         t_act = step_time(CompressionConfig(mode="aqsgd", fw_bits=3,
                                             bw_bits=6), grad_fp32)
-        t_all = step_time(CompressionConfig(mode="aqsgd", fw_bits=3,
-                                            bw_bits=6), grad_q4)
-        trows.append((bname, f"{MACRO/t_fp:.2f}", f"{MACRO/t_act:.2f}",
-                      f"{MACRO/t_all:.2f}", f"{t_fp/t_all:.2f}x"))
         results["throughput"][bname] = {
-            "fp32": MACRO / t_fp, "act_only": MACRO / t_act,
-            "act_plus_grad": MACRO / t_all, "speedup": t_fp / t_all}
-        print(f"e2e_throughput,{bname},fp32={MACRO/t_fp:.2f},"
-              f"act_only={MACRO/t_act:.2f},act+grad={MACRO/t_all:.2f},"
-              f"speedup={t_fp/t_all:.2f}x")
+            "fp32": MACRO / t_fp, "act_only": MACRO / t_act}
+        for wire in ("psum", "ring"):
+            t_all = step_time(CompressionConfig(mode="aqsgd", fw_bits=3,
+                                                bw_bits=6),
+                              grad_wire[wire])
+            trows.append((bname, wire, f"{MACRO/t_fp:.2f}",
+                          f"{MACRO/t_act:.2f}", f"{MACRO/t_all:.2f}",
+                          f"{t_fp/t_all:.2f}x"))
+            results["throughput"][bname][f"act_plus_grad_{wire}"] = \
+                MACRO / t_all
+            results["throughput"][bname][f"speedup_{wire}"] = t_fp / t_all
+            print(f"e2e_throughput,{bname},wire={wire},"
+                  f"fp32={MACRO/t_fp:.2f},act_only={MACRO/t_act:.2f},"
+                  f"act+grad={MACRO/t_all:.2f},"
+                  f"speedup={t_fp/t_all:.2f}x")
     write_csv("e2e_throughput.csv",
-              "bandwidth,fp32,act_only,act_plus_grad,speedup", trows)
+              "bandwidth,wire,fp32,act_only,act_plus_grad,speedup", trows)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)

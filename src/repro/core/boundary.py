@@ -4,9 +4,14 @@ Every wire crossing in the system goes through the ops below, each
 available on two bit-identical backends: the activation boundaries
 (AQ-SGD sender/receiver, DirectQ, backward-gradient quantize, z-bit
 buffer codec via `encode_delta`/`decode_accumulate`/`encode`/`decode`)
-and the data-parallel gradient wire (`encode_with_scale`/`decode_codes`
-/`decode_sum_mean` — the shared-scale compressed-allreduce codec behind
-`core.grad_compress` and `core.collectives`):
+and the data-parallel gradient wire — the shared-scale
+compressed-allreduce codec behind `core.grad_compress` and
+`core.collectives`: `encode_codes_with_scale` (the ONE sender entry
+point: int32 accumulator codes, plus the packed ring payload with
+pack=True), `accumulate_codes` (the ring's fused unpack-accumulate),
+`pack_sums`/`unpack_sums` (the ring's packed code-sum all-gather),
+`decode_sum_mean` (the receiver), and the legacy
+`encode_with_scale`/`decode_codes` pair:
 
 * ``"pallas"``    — the fused TPU kernels in `repro.kernels.quant_pack`:
   one HBM pass per side instead of the ~6 round-trips of the unfused
@@ -74,6 +79,37 @@ def _noise(shape, stochastic: bool, key) -> Optional[jax.Array]:
     return jax.random.uniform(key, shape, jnp.float32)
 
 
+def oncore_prng_enabled() -> bool:
+    """REPRO_ONCORE_PRNG=1 opts the pallas encode kernels into drawing
+    stochastic-rounding noise from the on-core PRNG instead of an HBM
+    noise tensor.  TPU-only (interpret mode cannot lower prng_seed) and
+    it relaxes the ref↔pallas parity contract to a STATISTICAL one —
+    gated by the 10k-trial unbiasedness test in test_grad_compress.py."""
+    return os.environ.get("REPRO_ONCORE_PRNG", "0") == "1"
+
+
+def _stochastic_args(shape, stochastic: bool, key, backend: str,
+                     noise=None):
+    """(noise tensor, on-core seed) for an encode op: exactly one is
+    non-None when stochastic.  The seed path activates only for the
+    pallas backend under the REPRO_ONCORE_PRNG opt-in."""
+    if not stochastic:
+        return None, None
+    if noise is not None:
+        return noise, None
+    if backend == "pallas" and oncore_prng_enabled():
+        if not K.oncore_prng_supported():
+            raise ValueError(
+                "REPRO_ONCORE_PRNG=1 but the on-core PRNG cannot lower "
+                "on this backend (CPU interpret mode has no prng_seed); "
+                "unset it or run on TPU")
+        if key is None:
+            raise ValueError("stochastic boundary ops need a PRNG key")
+        k = jnp.asarray(key).reshape(-1)[-2:]
+        return None, jax.lax.bitcast_convert_type(k, jnp.int32)
+    return _noise(shape, stochastic, key), None
+
+
 def encode_delta(a, m, *, bits: int, stochastic: bool = False, key=None,
                  backend: str = "auto"):
     """AQ-SGD sender: (a, m) -> (packed u8 (..., pw), scale f32 (..., 1),
@@ -83,9 +119,9 @@ def encode_delta(a, m, *, bits: int, stochastic: bool = False, key=None,
     Non-byte-aligned widths (fw3/bw6 ablations) are simulation-only:
     payload is the raw u8 codes, never densely packed."""
     backend = resolve_backend(backend, bits)
-    u = _noise(a.shape, stochastic, key)
+    u, seed = _stochastic_args(a.shape, stochastic, key, backend)
     if backend == "pallas":
-        return K.boundary_compress(a, m, u, bits=bits)
+        return K.boundary_compress(a, m, u, bits=bits, seed=seed)
     a32 = a.astype(jnp.float32)
     m32 = m.astype(jnp.float32)
     codes, scale = Q.quantize(a32 - m32, bits, stochastic=stochastic,
@@ -116,9 +152,9 @@ def encode(x, *, bits: int, stochastic: bool = False, key=None,
     writes.  Non-byte-aligned widths return raw u8 codes (simulation
     only)."""
     backend = resolve_backend(backend, bits)
-    u = _noise(x.shape, stochastic, key)
+    u, seed = _stochastic_args(x.shape, stochastic, key, backend)
     if backend == "pallas":
-        return K.quantize_pack(x, u, bits=bits)
+        return K.quantize_pack(x, u, bits=bits, seed=seed)
     codes, scale = Q.quantize(x.astype(jnp.float32), bits,
                               stochastic=stochastic, noise=u)
     packed = Q.pack_codes(codes, bits) if bits in PACKABLE_BITS else codes
@@ -184,6 +220,73 @@ def decode_sum_mean(total, scale, *, bits: int, n: int,
     lv = (1 << bits) - 1
     ic = total.astype(jnp.float32) * 2.0 - float(n * lv)
     return ((ic * scale) / lv) / n
+
+
+def encode_codes_with_scale(x, scale, *, bits: int, stochastic: bool = False,
+                            key=None, noise=None, pack: bool = False,
+                            backend: str = "auto"):
+    """Codes-only encode against a caller-supplied rowwise scale: the ONE
+    sender entry point of the compressed DP allreduce (psum wire, ring
+    wire, and the simulator all route here).
+
+    Returns int32 codes (..., d) — the accumulator form — without the
+    on-device pack→unpack round trip the old `encode_with_scale` +
+    `decode_codes` pair paid.  pack=True additionally emits the packed
+    u8 wire payload in the SAME fused pass: (packed, codes) — that is
+    the ring sender, whose packed segments genuinely ship.
+
+    Non-byte-aligned widths (simulation-only) return raw u8 codes as
+    the payload when pack=True."""
+    backend = resolve_backend(backend, bits)
+    scale = jnp.maximum(scale.astype(jnp.float32), Q._EPS)
+    u, seed = _stochastic_args(x.shape, stochastic, key, backend,
+                               noise=noise)
+    if backend == "pallas":
+        return K.quantize_codes_scaled(x, scale, u, bits=bits, pack=pack,
+                                       seed=seed)
+    codes, _ = Q.quantize(x.astype(jnp.float32), bits,
+                          stochastic=stochastic, noise=u, scale=scale)
+    icodes = codes.astype(jnp.int32)
+    if pack:
+        packed = Q.pack_codes(codes, bits) if bits in PACKABLE_BITS \
+            else codes
+        return packed, icodes
+    return icodes
+
+
+def accumulate_codes(packed, acc, *, bits: int, backend: str = "auto"):
+    """Ring accumulate step: acc + unpack(packed) in one fused int32
+    pass — the local accumulation that replaces the psum's i32 lanes
+    (int32 adds are exact in any order, which is what keeps the ring
+    bit-identical to `psum(codes)`)."""
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        return K.unpack_accumulate(packed, acc, bits=bits)
+    d = acc.shape[-1]
+    codes = Q.unpack_codes(packed, bits, d) if bits in PACKABLE_BITS \
+        else packed
+    return acc + codes.astype(jnp.int32)
+
+
+def pack_sums(total, *, bits: int, n: int, backend: str = "auto"):
+    """Pack int32 code sums over n workers densely at
+    `Q.sum_wire_bits(bits, n)` bits — the ring's all-gather payload.
+    (b + ceil(log2 n) bits per element is the exactness price: shipping
+    sums keeps the ring bit-identical to the psum wire, where
+    re-quantizing the mean to b bits would not.)"""
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        return K.pack_sums(total, bits=bits, n=n)
+    return Q.pack_sums(total, bits, n)
+
+
+def unpack_sums(packed, *, bits: int, n: int, d: int,
+                backend: str = "auto"):
+    """Inverse of `pack_sums`: u8 payload -> (..., d) int32 code sums."""
+    backend = resolve_backend(backend, bits)
+    if backend == "pallas":
+        return K.unpack_sums(packed, bits=bits, n=n)[..., :d]
+    return Q.unpack_sums(packed, bits, n, d)
 
 
 def roundtrip(x, *, bits: int, stochastic: bool = False, key=None,

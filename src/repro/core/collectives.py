@@ -1,31 +1,54 @@
 """Quantized collectives for data-parallel gradient averaging.
 
 The paper's Fig. 5 compresses *model gradients* on the DP axis
-(QuantizedAdam).  Inside shard_map the wire form is:
+(QuantizedAdam).  Two wire forms carry the same math:
 
-    s      = pmax(rowwise absmax)          (tiny, fp32)
-    packed = encode_with_scale(x, s)       (b-bit packed payload)
-    sum    = psum(int32 codes)             (wire: b-bit payload*)
-    mean   = decode_sum_mean(sum, s, n)
+* ``ef_psum_mean_bucket`` — the conservative psum wire:
 
-Quantization is linear given a *shared* scale, so psum-of-codes
+      s      = pmax(rowwise absmax)          (tiny, fp32)
+      codes  = encode_codes_with_scale(x, s) (int32 accumulator form)
+      sum    = psum(int32 codes)             (HLO: i32 lanes)
+      mean   = decode_sum_mean(sum, s, n)
+
+* ``ring_ef_reduce_mean_bucket`` — the bandwidth-optimal ring: the SAME
+  encode additionally emits the packed b-bit payload (one fused pass),
+  and the collective ships that payload itself.  Reduce-scatter half:
+  the bucket is cut into N row segments; at step t every device
+  ``ppermute``s its own packed codes of segment (i+t) mod N straight to
+  that segment's owner (a rotation-by-t permutation — N-1 steps, one
+  packed segment per device per step, exactly ``Q.wire_bytes`` of
+  payload per hop), and the owner folds the unpack into a fused
+  int32 unpack-accumulate (`B.accumulate_codes`).  All-gather half: the
+  owner's segment *sums* are packed at ``Q.sum_wire_bits(bits, n)`` =
+  b + ceil(log2 n) bits (`B.pack_sums`) and rotated to every device the
+  same way.  Every device then unpacks the full code-sum bucket and
+  runs the SAME ``decode_sum_mean``.
+
+  Because int32 code sums are exact in every addition order and the
+  shared scale is an order-independent f32 max, the ring is
+  BIT-IDENTICAL to the psum wire and to the simulator's
+  `grad_compress.compress_allreduce` on any mesh shape — including
+  compound (pod, data) axes (``ppermute``/``axis_index`` take the axis
+  tuple; rotations act on the flat row-major rank, the same index the
+  noise keys fold) and non-power-of-two ring sizes (the last segment is
+  ragged and zero-padded; padded rows carry zero codes and are sliced
+  off).  That parity is the correctness anchor: the ring lands as a
+  pure wire-cost change.
+
+  The log2(n) growth of the all-gather payload is the price of
+  exactness — re-quantizing the decoded mean would ship b bits in both
+  halves but double-quantizes, breaking the parity anchor (and the
+  EF telescoping analysis).  `ring_wire_bytes` models the realized
+  bytes precisely; `launch/hlo_cost.py` + tests/test_hlo_cost.py pin
+  them against the traced HLO.
+
+Quantization is linear given a *shared* scale, so a sum of codes
 dequantizes to the exact mean of the quantized values — the classic
-compressed-allreduce construction.  (*The HLO psum carries i32 lanes; a
-bandwidth-optimal ring implementation exchanges the b-bit codes and
-accumulates locally — the wire accounting in benchmarks uses the b-bit
-payload, the dry-run's i32 psum is the conservative bound.  The
-pack→unpack round trip below is kept on-device on purpose: the packed
-bytes are the shippable payload and the bit-exactness anchor the
-parity tests pin; a future ring keeps the pack and folds the unpack
-into its accumulate step.)
-
-Every quantize/pack/unpack step routes through `core.boundary`, the
-backend-selectable fused codec (`encode_with_scale` / `decode_codes` /
-`decode_sum_mean`), never the unfused jnp chain.  `ef_psum_mean_bucket`
-adds QuantizedAdam-style error feedback over the bucketed gradient of
-`core.grad_compress` — it is the distributed twin of
-`grad_compress.compress_allreduce` and matches it bit-for-bit (int32
-code sums are reduction-order exact, f32 pmax is order-independent).
+compressed-allreduce construction.  Every quantize/pack/unpack step
+routes through `core.boundary`, the backend-selectable fused codec,
+never the unfused jnp chain.  `ef_psum_mean_bucket` and the ring add
+QuantizedAdam-style error feedback over the bucketed gradient of
+`core.grad_compress`.
 """
 from __future__ import annotations
 
@@ -37,10 +60,20 @@ from repro.core import grad_compress as GC
 from repro.core import quantization as Q
 from repro.core.quantization import _EPS
 
+WIRES = ("psum", "ring")
+
 
 def _axis_tuple(axis_name):
     return axis_name if isinstance(axis_name, (tuple, list)) \
         else (axis_name,)
+
+
+def _flat_axis_index(axis_name):
+    """Flat row-major rank along the (possibly compound) DP axis —
+    `axis_index` accepts the axis tuple and matches the index
+    `_fold_axis_index` folds into the noise keys."""
+    axes = _axis_tuple(axis_name)
+    return jax.lax.axis_index(axes if len(axes) > 1 else axes[0])
 
 
 def _fold_axis_index(key, axis_name):
@@ -64,15 +97,16 @@ def quantized_psum_mean(x, axis_name: str, bits: int, key,
     inside shard_map over `axis_name`.  (``psum(1)`` of a Python scalar
     resolves statically from the axis env, so the fused receiver kernel
     gets the device count at trace time and it can never disagree with
-    the mesh.)"""
+    the mesh.)  Uses the codes-only encode — the same single entry
+    point as the gradient wires — so there is no on-device pack→unpack
+    round trip."""
     n = jax.lax.psum(1, axis_name)
     xf = x.astype(jnp.float32)
     local_s = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
     s = jnp.maximum(jax.lax.pmax(local_s, axis_name), _EPS)
-    packed = B.encode_with_scale(xf, s, bits=bits, stochastic=stochastic,
-                                 key=key, backend=backend)
-    codes = B.decode_codes(packed, bits=bits, d=x.shape[-1],
-                           backend=backend)
+    codes = B.encode_codes_with_scale(xf, s, bits=bits,
+                                      stochastic=stochastic, key=key,
+                                      backend=backend)
     total = jax.lax.psum(codes, axis_name)
     return B.decode_sum_mean(total, s, bits=bits, n=n, backend=backend)
 
@@ -80,7 +114,9 @@ def quantized_psum_mean(x, axis_name: str, bits: int, key,
 def ef_psum_mean_bucket(v_grad, err, axis_name, bits: int, key,
                         *, stochastic: bool = True,
                         backend: str = "auto"):
-    """Error-feedback compressed allreduce of one gradient bucket.
+    """Error-feedback compressed allreduce of one gradient bucket
+    (psum form: the collective carries i32 lanes — the conservative
+    bound the ring improves on).
 
     v_grad, err: (rows, group_d) f32 — this device's gradient bucket
     (`grad_compress.flatten_bucket`) and carried error.  Returns
@@ -92,16 +128,109 @@ def ef_psum_mean_bucket(v_grad, err, axis_name, bits: int, key,
     n = jax.lax.psum(1, axis_name)
     v = v_grad.astype(jnp.float32) + err
     s = jnp.maximum(jax.lax.pmax(GC.local_scale(v), axis_name), _EPS)
-    packed, new_err = GC.ef_encode(
+    _, codes, new_err = GC.ef_encode(
         v, s, bits, _fold_axis_index(key, axis_name),
         stochastic=stochastic, backend=backend)
-    codes = B.decode_codes(packed, bits=bits, d=v.shape[-1],
-                           backend=backend)
     total = jax.lax.psum(codes, axis_name)
     mean = B.decode_sum_mean(total, s, bits=bits, n=n, backend=backend)
     return mean, new_err
 
 
-def psum_wire_bytes(shape, bits: int) -> int:
-    """Ring-allreduce wire bytes per device for the quantized payload."""
-    return 2 * Q.wire_bytes(shape, bits)
+def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
+                               *, stochastic: bool = True,
+                               backend: str = "auto"):
+    """Error-feedback compressed allreduce as a bandwidth-optimal ring:
+    packed b-bit codes ship on the wire, accumulation is local.
+
+    Drop-in replacement for `ef_psum_mean_bucket` — same signature,
+    BIT-IDENTICAL result on every mesh shape (see module docstring).
+    Must run inside shard_map over `axis_name` (a name or an axis
+    tuple); the ring size n and the segment schedule resolve statically
+    from the axis env.
+
+    Schedule (n = ring size, device i, segment j owned by device j):
+
+      reduce-scatter: for t in 1..n-1, ship MY packed codes of segment
+        (i+t) mod n to its owner via the rotation-by-t ppermute; fold
+        each arriving segment into my int32 accumulator with the fused
+        unpack-accumulate.  After n-1 steps I hold the exact code sum
+        of my own segment.
+      all-gather: pack my segment sums at b + ceil(log2 n) bits and
+        rotate them to every device the same way; unpack all segments
+        and decode the mean locally.
+    """
+    axes = _axis_tuple(axis_name)
+    ax = axes if len(axes) > 1 else axes[0]
+    n = jax.lax.psum(1, axis_name)
+    v = v_grad.astype(jnp.float32) + err
+    s = jnp.maximum(jax.lax.pmax(GC.local_scale(v), axis_name), _EPS)
+    packed, codes, new_err = GC.ef_encode(
+        v, s, bits, _fold_axis_index(key, axis_name),
+        stochastic=stochastic, backend=backend, pack=True)
+    if n == 1:
+        mean = B.decode_sum_mean(codes, s, bits=bits, n=1,
+                                 backend=backend)
+        return mean, new_err
+
+    rows, d = v.shape
+    pw = packed.shape[-1]
+    seg = -(-rows // n)                    # segment rows (last one ragged)
+    pad = seg * n - rows
+    if pad:
+        # zero payload rows: they unpack to zero codes, accumulate to
+        # zero sums, and are sliced off before the decode
+        packed = jnp.pad(packed, ((0, pad), (0, 0)))
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    psegs = packed.reshape(n, seg, pw)
+    csegs = codes.reshape(n, seg, d)
+    i = _flat_axis_index(axis_name)
+
+    # ---- reduce-scatter: rotate packed code segments to their owners ----
+    acc = jax.lax.dynamic_index_in_dim(csegs, i, 0, keepdims=False)
+    for t in range(1, n):
+        perm = [(src, (src + t) % n) for src in range(n)]
+        send = jax.lax.dynamic_index_in_dim(psegs, (i + t) % n, 0,
+                                            keepdims=False)
+        recv = jax.lax.ppermute(send, ax, perm)
+        acc = B.accumulate_codes(recv, acc, bits=bits, backend=backend)
+
+    # ---- all-gather: rotate the packed segment sums to everyone --------
+    own = B.pack_sums(acc, bits=bits, n=n, backend=backend)
+    gathered = jnp.zeros((n,) + own.shape, jnp.uint8)
+    gathered = jax.lax.dynamic_update_index_in_dim(gathered, own, i, 0)
+    for t in range(1, n):
+        perm = [(src, (src + t) % n) for src in range(n)]
+        recv = jax.lax.ppermute(own, ax, perm)
+        gathered = jax.lax.dynamic_update_index_in_dim(
+            gathered, recv, (i - t) % n, 0)
+
+    total_p = gathered.reshape(n * seg, -1)[:rows]
+    total = B.unpack_sums(total_p, bits=bits, n=n, d=d, backend=backend)
+    mean = B.decode_sum_mean(total, s, bits=bits, n=n, backend=backend)
+    return mean, new_err
+
+
+def ring_wire_bytes(shape, bits: int, n: int = 2) -> int:
+    """Collective bytes of `ring_ef_reduce_mean_bucket` for one (rows, d)
+    bucket on an n-device ring — exact, matching what `launch/hlo_cost`
+    measures on the traced program (tests/test_hlo_cost.py pins this):
+
+    * reduce-scatter: n-1 ppermutes of one packed b-bit segment
+      (~ (n-1)/n of the bucket's packed payload per device);
+    * all-gather: n-1 ppermutes of one packed code-SUM segment at
+      b + ceil(log2 n) bits (`Q.sum_wire_bits` — the exactness
+      overhead);
+    * plus the fp32 scale ``pmax`` (one f32 per bucket row).
+    """
+    rows, d = shape
+    seg = -(-rows // max(n, 1))
+    hops = max(n - 1, 0)
+    return (hops * seg * Q.packed_width(d, bits)
+            + hops * seg * Q.sum_packed_width(d, bits, n)
+            + rows * 4)
+
+
+# Historical name: pre-ring accounting estimated the compressed psum as
+# 2x the packed payload.  Since the ring landed, the realized wire IS
+# the ring, so the old entry point resolves to its exact model.
+psum_wire_bytes = ring_wire_bytes

@@ -21,8 +21,10 @@ ONE zero-padded (rows, group_d) bucket (`BucketLayout`), so scale groups
 are always `group_d` wide regardless of leaf shapes — a (4096, 2) leaf
 no longer quantizes per-row with degenerate 2-element scale groups — and
 every pass runs through the fused `core.boundary` codec
-(`encode_with_scale` / `decode_codes` / `decode_sum_mean`): one HBM pass
-per side, no per-leaf Python loop, no unfused `Q.qdq`.
+(`encode_codes_with_scale` / `decode_sum_mean`): one HBM pass per side,
+no per-leaf Python loop, no unfused `Q.qdq`, and no on-device
+pack→unpack round trip — the codes-only encode IS the accumulator form
+(the ring wire asks the same pass for the packed payload too).
 
 Error-feedback state is the same (rows, group_d) f32 bucket, carried per
 worker across steps.
@@ -108,13 +110,24 @@ def local_scale(v: jax.Array) -> jax.Array:
 
 
 def ef_encode(v: jax.Array, scale: jax.Array, bits: int, key,
-              *, stochastic: bool = True, backend: str = "auto"):
+              *, stochastic: bool = True, backend: str = "auto",
+              pack: bool = False):
     """One worker's sender side: (compensated bucket, shared scale) ->
-    (packed wire payload, new carried error)."""
-    packed = B.encode_with_scale(v, scale, bits=bits, stochastic=stochastic,
-                                 key=key, backend=backend)
-    q = B.decode(packed, scale, bits=bits, d=v.shape[-1], backend=backend)
-    return packed, v - q
+    (packed payload | None, int32 codes, new carried error).
+
+    The codes-only encode (`B.encode_codes_with_scale`) is the ONE
+    entry point every wire shares: the psum wire and the simulator take
+    the codes straight to their accumulator (no on-device pack→unpack
+    round trip), the ring passes pack=True so the same fused pass also
+    emits the packed segments that ship on the ppermute hops.  The new
+    error is v - dequant(codes) via `decode_sum_mean` with n=1 (an
+    exact /1, so bit-identical to the old packed round trip)."""
+    out = B.encode_codes_with_scale(v, scale, bits=bits,
+                                    stochastic=stochastic, key=key,
+                                    pack=pack, backend=backend)
+    packed, codes = out if pack else (None, out)
+    q = B.decode_sum_mean(codes, scale, bits=bits, n=1, backend=backend)
+    return packed, codes, v - q
 
 
 def worker_key(key, i):
@@ -138,8 +151,8 @@ def compress_gradients(grads, error_state, bits: int, key,
     lay = layout or bucket_layout(grads)
     v = flatten_bucket(grads, lay) + error_state
     scale = jnp.maximum(local_scale(v), _EPS)
-    packed, new_err = ef_encode(v, scale, bits, worker_key(key, 0),
-                                stochastic=stochastic, backend=backend)
+    _, _, new_err = ef_encode(v, scale, bits, worker_key(key, 0),
+                              stochastic=stochastic, backend=backend)
     q = v - new_err
     return unflatten_bucket(q, lay, grads), new_err
 
@@ -165,15 +178,12 @@ def compress_allreduce(grads_list, error_state, bits: int, key,
     v = jnp.stack([flatten_bucket(g, lay) for g in grads_list]) \
         + error_state
     scale = jnp.maximum(jnp.max(local_scale(v), axis=0), _EPS)
-    packed, new_err = [], []
+    new_err = []
     total = None
     for i in range(n):
-        p, e = ef_encode(v[i], scale, bits, worker_key(key, i),
-                         stochastic=stochastic, backend=backend)
-        codes = B.decode_codes(p, bits=bits, d=lay.group_d,
-                               backend=backend)
+        _, codes, e = ef_encode(v[i], scale, bits, worker_key(key, i),
+                                stochastic=stochastic, backend=backend)
         total = codes if total is None else total + codes
-        packed.append(p)
         new_err.append(e)
     mean = B.decode_sum_mean(total, scale, bits=bits, n=n, backend=backend)
     return (unflatten_bucket(mean, lay, grads_list[0]),

@@ -167,8 +167,69 @@ def wire_bytes(shape: tuple[int, ...], bits: int,
     return nrows * packed_width(n, bits) + nrows * scale_bytes
 
 
+# ---------------------------------------------------------------------------
+# Code-SUM packing — the all-gather half of the compressed ring collective.
+#
+# A sum of n b-bit codes is at most n*(2**b - 1): it no longer fits b bits,
+# but it fits b + ceil(log2 n) — the log2(n) growth is the price of keeping
+# the ring bit-identical to ``psum(int32 codes)`` (re-quantizing the mean
+# would stay at b bits both phases but double-quantizes, breaking the
+# parity anchor).  Sums are packed densely at the narrowest supported
+# width: sub-byte widths reuse the dense code packer, 16/32-bit widths
+# split little-endian into u8 wire bytes.
+# ---------------------------------------------------------------------------
+
+SUM_WIRE_WIDTHS = (1, 2, 4, 8, 16, 32)
+
+
+def sum_wire_bits(bits: int, n: int) -> int:
+    """Narrowest packing width (in bits) holding any sum of n b-bit codes."""
+    assert n >= 1 and 1 <= bits <= 8, (bits, n)
+    maxv = n * ((1 << bits) - 1)
+    for sw in SUM_WIRE_WIDTHS:
+        if maxv <= (1 << sw) - 1:
+            return sw
+    raise ValueError(f"code sums for bits={bits}, n={n} exceed 32 bits")
+
+
+def sum_packed_width(d: int, bits: int, n: int) -> int:
+    """Packed wire bytes per row of d code sums over n workers."""
+    sw = sum_wire_bits(bits, n)
+    if sw <= 8:
+        k = 8 // sw
+        return (d + k - 1) // k
+    return d * (sw // 8)
+
+
+def pack_sums(total: jax.Array, bits: int, n: int) -> jax.Array:
+    """int32 code sums over n workers -> dense u8 payload
+    (`sum_wire_bits(bits, n)` bits per sum along the last axis)."""
+    sw = sum_wire_bits(bits, n)
+    if sw <= 8:
+        # sums < 2**sw <= 256 by construction: the code packer applies
+        return pack_codes(total.astype(jnp.uint8), sw)
+    nb = sw // 8
+    t = total.astype(jnp.uint32)
+    shifts = jnp.arange(nb, dtype=jnp.uint32) * 8
+    b = (t[..., None] >> shifts) & jnp.uint32(0xFF)
+    return b.reshape(*t.shape[:-1], -1).astype(jnp.uint8)
+
+
+def unpack_sums(packed: jax.Array, bits: int, n: int, d: int) -> jax.Array:
+    """Inverse of `pack_sums`; d = original last-axis length.  int32."""
+    sw = sum_wire_bits(bits, n)
+    if sw <= 8:
+        return unpack_codes(packed, sw, d).astype(jnp.int32)
+    nb = sw // 8
+    shifts = jnp.arange(nb, dtype=jnp.uint32) * 8
+    b = packed.astype(jnp.uint32).reshape(*packed.shape[:-1], -1, nb)
+    vals = jnp.sum(b << shifts, axis=-1)
+    return vals[..., :d].astype(jnp.int32)
+
+
 __all__ = [
     "absmax_scale", "quantize", "dequantize", "qdq",
     "codes_per_byte", "packed_width", "pack_codes", "unpack_codes",
     "wire_bytes",
+    "sum_wire_bits", "sum_packed_width", "pack_sums", "unpack_sums",
 ]

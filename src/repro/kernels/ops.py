@@ -11,6 +11,7 @@ callers may pass any (..., d) batch shape.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax.numpy as jnp
@@ -19,6 +20,25 @@ from repro.kernels import quant_pack as _qp
 from repro.kernels import flash_attention as _fa
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.lru_cache(maxsize=1)
+def oncore_prng_supported() -> bool:
+    """Whether the opt-in on-core PRNG encode path can lower here.
+
+    pltpu.prng_seed has no CPU interpret-mode lowering (jax 0.4.x), so
+    on CPU containers this is False and the boundary layer refuses the
+    REPRO_ONCORE_PRNG opt-in with a clear error instead of a lowering
+    crash."""
+    try:
+        x = jnp.zeros((8, 16), jnp.float32)
+        _qp.quantize_codes_scaled(
+            x, jnp.ones((8, 1), jnp.float32),
+            bits=8, seed=jnp.zeros((2,), jnp.int32),
+            interpret=INTERPRET).block_until_ready()
+        return True
+    except Exception:
+        return False
 
 
 def _padded_rows(r: int, block_r: int) -> int:
@@ -39,16 +59,19 @@ def _as_rows(x, d: int, block_r: int):
     return x2, r
 
 
-def boundary_compress(a, m, u=None, *, bits: int, block_r: int = 128):
+def boundary_compress(a, m, u=None, *, bits: int, seed=None,
+                      block_r: int = 128):
     """Sender side of an AQ-SGD boundary: (a, m) -> (packed, scale, m_new).
-    a, m (and optional stochastic noise u): any (..., d)."""
+    a, m (and optional stochastic noise u): any (..., d).  seed: (2,)
+    i32 selects the on-core PRNG path (TPU only) instead of u."""
     shape = a.shape
     d = shape[-1]
     a2, r = _as_rows(a, d, block_r)
     m2, _ = _as_rows(m, d, block_r)
     u2 = None if u is None else _as_rows(u, d, block_r)[0]
     packed, scale, m_new = _qp.delta_quantize_pack(
-        a2, m2, u2, bits=bits, block_r=block_r, interpret=INTERPRET)
+        a2, m2, u2, bits=bits, seed=seed, block_r=block_r,
+        interpret=INTERPRET)
     return (packed[:r].reshape(*shape[:-1], -1),
             scale[:r].reshape(*shape[:-1], 1),
             m_new[:r].reshape(shape))
@@ -67,15 +90,16 @@ def boundary_decompress(packed, scale, m, *, bits: int,
     return out[:r].reshape(shape)
 
 
-def quantize_pack(x, u=None, *, bits: int, block_r: int = 128):
+def quantize_pack(x, u=None, *, bits: int, seed=None, block_r: int = 128):
     """Fused absmax -> quantize -> pack for any (..., d) tensor: the
-    DirectQ sender, backward-gradient quantize, and z-bit buffer write."""
+    DirectQ sender, backward-gradient quantize, and z-bit buffer write.
+    seed: (2,) i32 selects the on-core PRNG path (TPU only)."""
     shape = x.shape
     d = shape[-1]
     x2, r = _as_rows(x, d, block_r)
     u2 = None if u is None else _as_rows(u, d, block_r)[0]
-    packed, scale = _qp.quantize_pack(x2, u2, bits=bits, block_r=block_r,
-                                      interpret=INTERPRET)
+    packed, scale = _qp.quantize_pack(x2, u2, bits=bits, seed=seed,
+                                      block_r=block_r, interpret=INTERPRET)
     return (packed[:r].reshape(*shape[:-1], -1),
             scale[:r].reshape(*shape[:-1], 1))
 
@@ -113,6 +137,60 @@ def unpack_codes(packed, *, bits: int, block_r: int = 128):
     p2, r = _as_rows(packed, shape[-1], block_r)
     out = _qp.unpack_codes(p2, bits=bits, block_r=block_r,
                            interpret=INTERPRET)
+    return out[:r].reshape(*shape[:-1], out.shape[-1])
+
+
+def quantize_codes_scaled(x, s, u=None, *, bits: int, pack: bool = False,
+                          seed=None, block_r: int = 128):
+    """Codes-only encode for any (..., d) tensor: quantize against the
+    supplied (pmax-shared) rowwise scale and emit the int32 accumulator
+    codes — with pack=True the same pass also emits the packed u8 wire
+    payload (ring sender).  seed: (2,) i32 selects the on-core PRNG
+    path (TPU only) instead of an explicit noise tensor."""
+    shape = x.shape
+    d = shape[-1]
+    x2, r = _as_rows(x, d, block_r)
+    s2, _ = _as_rows(s, 1, block_r)
+    u2 = None if u is None else _as_rows(u, d, block_r)[0]
+    out = _qp.quantize_codes_scaled(x2, s2, u2, bits=bits, pack=pack,
+                                    seed=seed, block_r=block_r,
+                                    interpret=INTERPRET)
+    if pack:
+        packed, codes = out
+        return (packed[:r].reshape(*shape[:-1], -1),
+                codes[:r].reshape(shape))
+    return out[:r].reshape(shape)
+
+
+def unpack_accumulate(packed, acc, *, bits: int, block_r: int = 128):
+    """Fused unpack + int32 accumulate for any (..., pw) payload — the
+    ring's accumulate step.  acc: (..., pw * 8/bits) i32.  Padded rows
+    accumulate zeros and are sliced off, so ragged (last) ring segments
+    are safe."""
+    shape = acc.shape
+    p2, r = _as_rows(packed, packed.shape[-1], block_r)
+    a2, _ = _as_rows(acc, acc.shape[-1], block_r)
+    out = _qp.unpack_accumulate(p2, a2, bits=bits, block_r=block_r,
+                                interpret=INTERPRET)
+    return out[:r].reshape(shape)
+
+
+def pack_sums(total, *, bits: int, n: int, block_r: int = 128):
+    """Dense code-sum packing for any (..., d) i32 sum tensor — the
+    ring's all-gather payload (`Q.sum_wire_bits(bits, n)` bits/sum)."""
+    shape = total.shape
+    t2, r = _as_rows(total, shape[-1], block_r)
+    out = _qp.pack_sums(t2, bits=bits, n=n, block_r=block_r,
+                        interpret=INTERPRET)
+    return out[:r].reshape(*shape[:-1], out.shape[-1])
+
+
+def unpack_sums(packed, *, bits: int, n: int, block_r: int = 128):
+    """Inverse of `pack_sums` for any (..., pw) payload."""
+    shape = packed.shape
+    p2, r = _as_rows(packed, shape[-1], block_r)
+    out = _qp.unpack_sums(p2, bits=bits, n=n, block_r=block_r,
+                          interpret=INTERPRET)
     return out[:r].reshape(*shape[:-1], out.shape[-1])
 
 

@@ -27,13 +27,36 @@ Three further variants carry the data-parallel *gradient* wire
 * ``dequant_sum_mean``         — turn the int32 code *sum* over n
                                  workers back into the mean gradient.
 
+Three more carry the *ring* form of that wire
+(`core.collectives.ring_ef_reduce_mean_bucket` — packed codes on the
+ppermute hops, local accumulation):
+
+* ``quantize_codes_scaled``     — codes-only encode (optionally also
+                                  packed): one pass emits the int32
+                                  accumulator form and, for the ring,
+                                  the packed wire payload — no on-device
+                                  pack→unpack round trip;
+* ``unpack_accumulate``         — the ring's accumulate step: unpack an
+                                  incoming packed segment and add it to
+                                  the local int32 code accumulator in
+                                  one pass;
+* ``pack_sums`` / ``unpack_sums`` — the ring's all-gather payload: code
+                                  *sums* packed at the narrowest width
+                                  holding n*(2**b - 1)
+                                  (`Q.sum_wire_bits`).
+
 Stochastic rounding takes the uniform noise tensor as an explicit kernel
 input rather than seeding the on-core PRNG (pltpu.prng_random_bits): the
 reference jnp backend consumes the *same* noise, which is what makes the
 two backends bit-identical — the contract tests/test_boundary_parity.py
-enforces.  On real TPUs the noise input costs one extra HBM read; moving
-to the on-core PRNG is a pure perf follow-up that must relax that
-contract to a statistical one.
+enforces.  On real TPUs the noise input costs one extra HBM read; the
+encode kernels therefore also accept an OPT-IN ``seed`` path
+(`REPRO_ONCORE_PRNG=1` at the boundary layer) that draws the uniform
+noise on-core via ``pltpu.prng_seed``/``prng_random_bits`` instead.
+That path relaxes the ref↔pallas contract to a statistical one (gated
+by a dedicated 10k-trial unbiasedness test in test_grad_compress.py)
+and is TPU-only: interpret mode has no CPU lowering for ``prng_seed``
+(`repro.kernels.ops.oncore_prng_supported` probes for it).
 
 TPU mapping: rows (tokens) are tiled along the grid; each grid step holds
 a (BLOCK_R, d) tile in VMEM — d (the model dim, ≤ 8 KiB per row in bf16)
@@ -52,9 +75,48 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _EPS = 1e-12
 DEFAULT_BLOCK_R = 128
+
+
+def _oncore_uniform(shape, seed_ref):
+    """Uniform(0,1) drawn from the on-core PRNG (TPU only).
+
+    Seeds with the two key words plus the grid position, so every block
+    gets an independent stream; 24 mantissa bits of each u32 give an
+    exact-in-f32 uniform on {0, ..., 2**24-1} / 2**24."""
+    pltpu.prng_seed(seed_ref[0], seed_ref[1], pl.program_id(0))
+    rb = pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+    return (rb >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+def _seed_spec():
+    """BlockSpec for the (2,) i32 seed of the on-core PRNG path."""
+    return pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
+def _noise_arg(u, seed, row_spec):
+    """Shared plumbing for the encode entry points: at most one of
+    (u, seed) may be given.  Returns (extra_args, extra_specs, mode)."""
+    assert u is None or seed is None, "pass uniform noise OR a PRNG seed"
+    if u is not None:
+        return [u], [row_spec], "input"
+    if seed is not None:
+        return [jnp.asarray(seed, jnp.int32)], [_seed_spec()], "oncore"
+    return [], [], "none"
+
+
+def _kernel_noise(noise, rest, shape):
+    """Pop the noise operand (if any) off `rest` and realize the uniform
+    tensor for `_quant_codes`; `shape` is the block's value shape."""
+    rest = list(rest)
+    if noise == "input":
+        return rest.pop(0)[...], rest
+    if noise == "oncore":
+        return _oncore_uniform(shape, rest.pop(0)), rest
+    return None, rest
 
 
 def _levels(bits: int) -> int:
@@ -109,13 +171,9 @@ def _dequant(codes, scale, bits: int):
 # AQ-SGD sender: delta -> quantize -> pack (+ buffer update)
 # ---------------------------------------------------------------------------
 
-def _dqp_kernel(a_ref, m_ref, *rest, bits: int, stochastic: bool):
-    if stochastic:
-        u_ref, packed_ref, scale_ref, mnew_ref = rest
-        u = u_ref[...]
-    else:
-        packed_ref, scale_ref, mnew_ref = rest
-        u = None
+def _dqp_kernel(a_ref, m_ref, *rest, bits: int, noise: str):
+    u, (packed_ref, scale_ref, mnew_ref) = _kernel_noise(
+        noise, rest, a_ref.shape)
     a = a_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
     delta = a - m
@@ -129,11 +187,12 @@ def _dqp_kernel(a_ref, m_ref, *rest, bits: int, stochastic: bool):
 
 @functools.partial(jax.jit, static_argnames=("bits", "block_r",
                                              "interpret"))
-def delta_quantize_pack(a, m, u=None, *, bits: int,
+def delta_quantize_pack(a, m, u=None, *, bits: int, seed=None,
                         block_r: int = DEFAULT_BLOCK_R,
                         interpret: bool = True):
     """a, m: (R, d); u: optional uniform noise (R, d) for stochastic
-    rounding.  Returns (packed (R, d//(8/bits)) u8, scale (R, 1) f32,
+    rounding (or seed: (2,) i32 for the on-core PRNG path, TPU only).
+    Returns (packed (R, d//(8/bits)) u8, scale (R, 1) f32,
     m_new (R, d) f32)."""
     assert bits in (2, 4, 8), bits
     r, d = a.shape
@@ -143,13 +202,11 @@ def delta_quantize_pack(a, m, u=None, *, bits: int,
     br = min(block_r, r)
     grid = (r // br,)
     row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
-    in_specs = [row_spec, row_spec]
-    args = [a, m]
-    if u is not None:
-        in_specs.append(row_spec)
-        args.append(u)
+    nargs, nspecs, noise = _noise_arg(u, seed, row_spec)
+    in_specs = [row_spec, row_spec] + nspecs
+    args = [a, m] + nargs
     return pl.pallas_call(
-        functools.partial(_dqp_kernel, bits=bits, stochastic=u is not None),
+        functools.partial(_dqp_kernel, bits=bits, noise=noise),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -208,13 +265,8 @@ def dequant_unpack_accumulate(packed, scale, m, *, bits: int,
 # DirectQ / backward-gradient / buffer codec: absmax -> quantize -> pack
 # ---------------------------------------------------------------------------
 
-def _qp_kernel(x_ref, *rest, bits: int, stochastic: bool):
-    if stochastic:
-        u_ref, packed_ref, scale_ref = rest
-        u = u_ref[...]
-    else:
-        packed_ref, scale_ref = rest
-        u = None
+def _qp_kernel(x_ref, *rest, bits: int, noise: str):
+    u, (packed_ref, scale_ref) = _kernel_noise(noise, rest, x_ref.shape)
     x = x_ref[...].astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), _EPS)
     packed_ref[...] = _pack(_quant_codes(x, scale, bits, u), bits)
@@ -223,9 +275,11 @@ def _qp_kernel(x_ref, *rest, bits: int, stochastic: bool):
 
 @functools.partial(jax.jit, static_argnames=("bits", "block_r",
                                              "interpret"))
-def quantize_pack(x, u=None, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
+def quantize_pack(x, u=None, *, bits: int, seed=None,
+                  block_r: int = DEFAULT_BLOCK_R,
                   interpret: bool = True):
-    """x: (R, d); u: optional uniform noise (R, d).  Returns
+    """x: (R, d); u: optional uniform noise (R, d) (or seed: (2,) i32
+    for the on-core PRNG path, TPU only).  Returns
     (packed (R, d//(8/bits)) u8, scale (R, 1) f32) — one fused pass for
     the DirectQ sender, backward-gradient quantize, and z-bit buffer
     writes."""
@@ -237,13 +291,11 @@ def quantize_pack(x, u=None, *, bits: int, block_r: int = DEFAULT_BLOCK_R,
     br = min(block_r, r)
     grid = (r // br,)
     row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
-    in_specs = [row_spec]
-    args = [x]
-    if u is not None:
-        in_specs.append(row_spec)
-        args.append(u)
+    nargs, nspecs, noise = _noise_arg(u, seed, row_spec)
+    in_specs = [row_spec] + nspecs
+    args = [x] + nargs
     return pl.pallas_call(
-        functools.partial(_qp_kernel, bits=bits, stochastic=u is not None),
+        functools.partial(_qp_kernel, bits=bits, noise=noise),
         grid=grid,
         in_specs=in_specs,
         out_specs=[
@@ -402,3 +454,184 @@ def dequant_sum_mean(total, s, *, bits: int, n: int,
         out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
         interpret=interpret,
     )(total, s)
+
+
+# ---------------------------------------------------------------------------
+# compressed ring collective: codes-only encode, unpack-accumulate,
+# code-sum pack/unpack (core.collectives.ring_ef_reduce_mean_bucket)
+# ---------------------------------------------------------------------------
+
+def _qcs_kernel(x_ref, s_ref, *rest, bits: int, noise: str, pack: bool):
+    u, outs = _kernel_noise(noise, rest, x_ref.shape)
+    if pack:
+        packed_ref, codes_ref = outs
+    else:
+        (codes_ref,) = outs
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(s_ref[...].astype(jnp.float32), _EPS)
+    codes = _quant_codes(x, scale, bits, u)
+    if pack:
+        packed_ref[...] = _pack(codes, bits)
+    codes_ref[...] = codes.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "pack", "block_r",
+                                             "interpret"))
+def quantize_codes_scaled(x, s, u=None, *, bits: int, pack: bool = False,
+                          seed=None, block_r: int = DEFAULT_BLOCK_R,
+                          interpret: bool = True):
+    """Codes-only encode: quantize x (R, d) against the caller-supplied
+    rowwise scale s (R, 1) and emit int32 codes — the accumulator form a
+    compressed allreduce sums — WITHOUT the pack→unpack round trip of
+    `quantize_pack_scaled` + `unpack_codes`.  With pack=True the same
+    pass also emits the packed u8 wire payload (the ring's hop
+    segments).  u: optional uniform noise (R, d) (or seed: (2,) i32 for
+    the on-core PRNG path, TPU only).
+
+    Returns codes (R, d) i32, or (packed (R, d//(8/bits)) u8, codes)."""
+    assert bits in (2, 4, 8), bits
+    r, d = x.shape
+    k = 8 // bits
+    assert d % k == 0, (d, bits)
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    row_spec = pl.BlockSpec((br, d), lambda i: (i, 0))
+    nargs, nspecs, noise = _noise_arg(u, seed, row_spec)
+    in_specs = [row_spec, pl.BlockSpec((br, 1), lambda i: (i, 0))] + nspecs
+    args = [x, s] + nargs
+    out_specs = [pl.BlockSpec((br, d), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((r, d), jnp.int32)]
+    if pack:
+        out_specs = [pl.BlockSpec((br, d // k), lambda i: (i, 0))] \
+            + out_specs
+        out_shape = [jax.ShapeDtypeStruct((r, d // k), jnp.uint8)] \
+            + out_shape
+    out = pl.pallas_call(
+        functools.partial(_qcs_kernel, bits=bits, noise=noise, pack=pack),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    return tuple(out) if pack else out[0]
+
+
+def _ua_kernel(packed_ref, acc_ref, out_ref, *, bits: int):
+    out_ref[...] = acc_ref[...] + _unpack(packed_ref[...], bits
+                                          ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_r",
+                                             "interpret"))
+def unpack_accumulate(packed, acc, *, bits: int,
+                      block_r: int = DEFAULT_BLOCK_R,
+                      interpret: bool = True):
+    """packed (R, pw) u8 incoming ring segment, acc (R, pw * 8/bits) i32
+    local code accumulator.  Returns acc + unpack(packed) in ONE pass —
+    the ring's accumulate step (the unpack the psum wire used to run as
+    a separate op now rides the accumulation's HBM traffic)."""
+    assert bits in (2, 4, 8), bits
+    r, pw = packed.shape
+    k = 8 // bits
+    d = pw * k
+    assert acc.shape == (r, d), (acc.shape, r, d)
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_ua_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, pw), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.int32),
+        interpret=interpret,
+    )(packed, acc)
+
+
+def _sum_geometry(bits: int, n: int) -> int:
+    """Sum packing width in bits — mirrors
+    core.quantization.sum_wire_bits."""
+    maxv = n * _levels(bits)
+    for sw in (1, 2, 4, 8, 16, 32):
+        if maxv <= (1 << sw) - 1:
+            return sw
+    raise ValueError((bits, n))
+
+
+def _ps_kernel(total_ref, out_ref, *, sw: int):
+    t = total_ref[...].astype(jnp.uint32)
+    if sw <= 8:
+        out_ref[...] = _pack(t, sw)
+    else:
+        nb = sw // 8
+        shifts = (jnp.arange(nb, dtype=jnp.uint32) * 8)[None, None, :]
+        b = (t[..., None] >> shifts) & jnp.uint32(0xFF)
+        out_ref[...] = b.reshape(t.shape[0], -1).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "block_r",
+                                             "interpret"))
+def pack_sums(total, *, bits: int, n: int,
+              block_r: int = DEFAULT_BLOCK_R, interpret: bool = True):
+    """total (R, d) i32 code sums over n workers -> dense u8 payload at
+    `sum_wire_bits(bits, n)` bits per sum — the ring's all-gather hop
+    format (b + ceil(log2 n) bits is the exactness price of shipping
+    sums instead of re-quantizing)."""
+    assert bits in (2, 4, 8), bits
+    sw = _sum_geometry(bits, n)
+    r, d = total.shape
+    if sw <= 8:
+        k = 8 // sw
+        assert d % k == 0, (d, sw)
+        pw = d // k
+    else:
+        pw = d * (sw // 8)
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_ps_kernel, sw=sw),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, pw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, pw), jnp.uint8),
+        interpret=interpret,
+    )(total)
+
+
+def _us_kernel(packed_ref, out_ref, *, sw: int):
+    p = packed_ref[...]
+    if sw <= 8:
+        out_ref[...] = _unpack(p, sw).astype(jnp.int32)
+    else:
+        nb = sw // 8
+        shifts = (jnp.arange(nb, dtype=jnp.uint32) * 8)[None, None, :]
+        b = p.astype(jnp.uint32).reshape(p.shape[0], -1, nb)
+        out_ref[...] = jnp.sum(b << shifts, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n", "block_r",
+                                             "interpret"))
+def unpack_sums(packed, *, bits: int, n: int,
+                block_r: int = DEFAULT_BLOCK_R, interpret: bool = True):
+    """Inverse of `pack_sums`: u8 payload -> (R, d) i32 code sums."""
+    assert bits in (2, 4, 8), bits
+    sw = _sum_geometry(bits, n)
+    r, pw = packed.shape
+    d = pw * (8 // sw) if sw <= 8 else pw // (sw // 8)
+    assert r % block_r == 0 or r < block_r, (r, block_r)
+    br = min(block_r, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_us_kernel, sw=sw),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, pw), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.int32),
+        interpret=interpret,
+    )(packed)

@@ -93,6 +93,63 @@ def unpack_codes_ref(packed, bits: int):
     return vals.reshape(packed.shape[0], -1).astype(jnp.int32)
 
 
+def quantize_codes_scaled_ref(x, s, bits: int, u=None, pack: bool = False):
+    """Codes-only encode oracle: quantize against the supplied (shared)
+    scale, emit int32 codes — and, with pack=True, also the packed u8
+    wire payload (the ring sender's one-pass output)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(s.astype(jnp.float32), _EPS)
+    codes = _codes_ref(x, scale, bits, u)
+    if pack:
+        return _pack_ref(codes, bits), codes.astype(jnp.int32)
+    return codes.astype(jnp.int32)
+
+
+def unpack_accumulate_ref(packed, acc, bits: int):
+    """Ring accumulate oracle: acc + unpack(packed) in int32."""
+    return acc.astype(jnp.int32) + unpack_codes_ref(packed, bits)
+
+
+def _sum_width_ref(bits: int, n: int) -> int:
+    maxv = n * ((1 << bits) - 1)
+    for sw in (1, 2, 4, 8, 16, 32):
+        if maxv <= (1 << sw) - 1:
+            return sw
+    raise ValueError((bits, n))
+
+
+def pack_sums_ref(total, bits: int, n: int):
+    """Code-sum packing oracle: i32 sums over n workers -> u8 payload at
+    the narrowest width holding n*(2**bits - 1)."""
+    sw = _sum_width_ref(bits, n)
+    t = total.astype(jnp.uint32)
+    if sw <= 8:
+        k = 8 // sw
+        r, d = t.shape
+        grouped = t.reshape(r, d // k, k)
+        shifts = jnp.arange(k, dtype=jnp.uint32) * sw
+        return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint8)
+    nb = sw // 8
+    shifts = jnp.arange(nb, dtype=jnp.uint32) * 8
+    b = (t[..., None] >> shifts) & jnp.uint32(0xFF)
+    return b.reshape(t.shape[0], -1).astype(jnp.uint8)
+
+
+def unpack_sums_ref(packed, bits: int, n: int):
+    """Inverse of pack_sums_ref (full packed width)."""
+    sw = _sum_width_ref(bits, n)
+    if sw <= 8:
+        k = 8 // sw
+        shifts = jnp.arange(k, dtype=jnp.uint32) * sw
+        vals = (packed[..., None].astype(jnp.uint32) >> shifts) \
+            & jnp.uint32((1 << sw) - 1)
+        return vals.reshape(packed.shape[0], -1).astype(jnp.int32)
+    nb = sw // 8
+    shifts = jnp.arange(nb, dtype=jnp.uint32) * 8
+    b = packed.astype(jnp.uint32).reshape(packed.shape[0], -1, nb)
+    return jnp.sum(b << shifts, axis=-1).astype(jnp.int32)
+
+
 def dequant_sum_mean_ref(total, s, bits: int, n: int):
     """Int32 code sum over n workers + shared scale -> mean gradient.
     Same association as _dequant_ref (2T - n*lv exact, trailing

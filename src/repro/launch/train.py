@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--dp-workers", type=int, default=2,
                     help="simulated DP degree for --dp-grad-bits in the "
                          "single-host trainer")
+    ap.add_argument("--dp-wire", default="ring", choices=["ring", "psum"],
+                    help="DP gradient collective (--distributed only): "
+                         "ring ships the packed b-bit codes themselves "
+                         "(bandwidth-optimal); psum is the conservative "
+                         "i32-lane collective.  Bit-identical results")
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -94,7 +99,8 @@ def main():
     mesh = make_debug_mesh(args.data_par, args.stages)
     pcfg = PL.PipelineConfig(microbatches=args.microbatches,
                              compression=cc, warmup=True,
-                             dp_grad_bits=args.dp_grad_bits)
+                             dp_grad_bits=args.dp_grad_bits,
+                             dp_wire=args.dp_wire)
     gb = args.batch
     step_w, meta = PL.make_train_step(cfg, pcfg, mesh, opt,
                                       global_batch=gb, seq_len=args.seq,
@@ -102,7 +108,8 @@ def main():
                                       // args.data_par)
     pcfg2 = PL.PipelineConfig(microbatches=args.microbatches,
                               compression=cc, warmup=False,
-                              dp_grad_bits=args.dp_grad_bits)
+                              dp_grad_bits=args.dp_grad_bits,
+                              dp_wire=args.dp_wire)
     step_c, _ = PL.make_train_step(cfg, pcfg2, mesh, opt,
                                    global_batch=gb, seq_len=args.seq,
                                    buffer_samples=args.samples

@@ -20,11 +20,14 @@ payloads — the compression shows up in the §Roofline collective term.
 
 DP gradient wire (``dp_grad_bits > 0``, paper Fig. 5 "end-to-end
 communication compression"): the whole gradient tree is flattened into
-one bucketed (rows, group_d) array and allreduced over the DP axes
-through `core.collectives.ef_psum_mean_bucket` — pmax-shared rowwise
-scales, fused quantize-pack, int32 code-domain ``psum``, fused
-dequant-mean — with per-rank error-feedback state (``dp_error`` in the
-train state, sharded one bucket per DP rank).  The wire FUNCTION is
+one bucketed (rows, group_d) array and allreduced over the DP axes —
+pmax-shared rowwise scales, fused codes-only quantize, exact int32 code
+accumulation, fused dequant-mean — with per-rank error-feedback state
+(``dp_error`` in the train state, sharded one bucket per DP rank).
+``dp_wire`` picks the collective: the bandwidth-optimal compressed ring
+(packed b-bit codes on ``ppermute`` hops, local unpack-accumulate —
+the default) or the conservative i32-lane code ``psum``; both are
+bit-identical (see `make_dp_grad_wire`).  The wire FUNCTION is
 bit-identical to the simulator's `grad_compress.compress_allreduce`
 (tests/workers/dp_grad_worker.py feeds both distinct per-rank buckets
 and compares bit-for-bit).  Placement caveat: in THIS train step the
@@ -87,6 +90,10 @@ class PipelineConfig:
     dp_grad_bits: int = 0           # Fig. 5: b-bit error-feedback gradient
                                     # compression on the DP axis (0 = off)
     dp_grad_group: int = GC.DEFAULT_GROUP_D  # gradient-bucket group width
+    dp_wire: str = "ring"           # ring: packed b-bit codes on the wire
+                                    # (bandwidth-optimal); psum: i32-lane
+                                    # collective (conservative baseline).
+                                    # Bit-identical results either way.
     moe_mode: str = "zero3"         # zero3 | expert_parallel (§Perf)
     remat_mode: str = "nested"      # nested | layer (§Perf: nested saves
                                     # HBM, layer saves one fwd recompute)
@@ -353,11 +360,23 @@ def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
 
     The gradient tree is flattened into one (rows, group_d) bucket
     (`core.grad_compress.bucket_layout`) which every device holds in
-    full; the wire (`core.collectives.ef_psum_mean_bucket`) pmax-shares
-    the rowwise scale, quantizes through the fused boundary codec, and
-    psum-accumulates int32 codes over the DP axes.  Error-feedback state
-    is per DP rank: a (D, rows, group_d) array sharded over the data
-    axes so each device carries exactly its own feedback bucket.
+    full; the wire pmax-shares the rowwise scale, quantizes through the
+    fused boundary codec, and accumulates int32 codes over the DP axes.
+    ``pcfg.dp_wire`` selects the collective:
+
+    * ``"ring"`` (default) — `core.collectives.ring_ef_reduce_mean_bucket`:
+      the packed b-bit codes themselves ship on rotation-scheduled
+      ``ppermute`` hops (reduce-scatter of code segments with fused
+      local unpack-accumulate, then an all-gather of packed code sums);
+    * ``"psum"`` — `core.collectives.ef_psum_mean_bucket`: the i32-lane
+      code ``psum`` (conservative wire bound, kept as the baseline the
+      HLO-cost regression test measures the ring against).
+
+    Both produce BIT-IDENTICAL results (int32 code sums are exact in
+    any order), so the switch is purely a wire-cost choice.
+    Error-feedback state is per DP rank: a (D, rows, group_d) array
+    sharded over the data axes so each device carries exactly its own
+    feedback bucket.
 
     Noise keys fold in the device's DP position, so ranks draw
     independent rounding noise and the allreduce is a genuine n-worker
@@ -368,9 +387,12 @@ def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
     module docstring's placement caveat.)"""
     daxes = data_axes(mesh)
     axis = daxes if len(daxes) > 1 else daxes[0]
+    assert pcfg.dp_wire in C.WIRES, pcfg.dp_wire
+    collective = C.ring_ef_reduce_mean_bucket if pcfg.dp_wire == "ring" \
+        else C.ef_psum_mean_bucket
 
     def wire(g2d, err, key):
-        mean, new_err = C.ef_psum_mean_bucket(
+        mean, new_err = collective(
             g2d, err[0], axis, pcfg.dp_grad_bits, key,
             stochastic=cc.stochastic, backend=cc.backend)
         return mean, new_err[None]

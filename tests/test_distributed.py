@@ -37,9 +37,12 @@ def test_quantized_psum_mean():
 
 
 def test_dp_grad_wire_matches_simulation():
-    """The error-feedback compressed DP gradient wire over 2 devices
-    (pmax scale + int32 code psum through the fused codec) matches
-    `grad_compress.compress_allreduce` bit-for-bit, both backends."""
+    """Both error-feedback compressed DP gradient wires — the i32-lane
+    code psum and the bandwidth-optimal compressed ring (packed b-bit
+    segments on rotation ppermutes + fused local unpack-accumulate) —
+    match `grad_compress.compress_allreduce` bit-for-bit, on both
+    backends, across ring sizes {2, 3, 5, 8} and compound pod x data
+    axes (2x2, 2x3) including non-power-of-two ragged segments."""
     out = run_worker("dp_grad_worker.py", "run")
     assert "OK dp_grad" in out
 

@@ -15,8 +15,10 @@ from repro.kernels import ops, ref
 from repro.kernels.quant_pack import (delta_quantize_pack,
                                       dequant_sum_mean,
                                       dequant_unpack_accumulate,
+                                      pack_sums, quantize_codes_scaled,
                                       quantize_pack, quantize_pack_scaled,
-                                      unpack_codes, unpack_dequant)
+                                      unpack_accumulate, unpack_codes,
+                                      unpack_dequant, unpack_sums)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -171,6 +173,98 @@ def test_dequant_sum_mean_matches_ref_and_mean_semantics(bits, n):
     np.testing.assert_allclose(np.asarray(got),
                                np.mean(np.stack(per), axis=0),
                                rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+@pytest.mark.parametrize("pack", [False, True])
+def test_quantize_codes_scaled_matches_ref_and_packed_path(bits, stochastic,
+                                                           pack):
+    """Codes-only encode (the ring/psum sender): one pass must emit the
+    SAME codes the pack→unpack round trip produced, and with pack=True
+    the same packed payload as `quantize_pack_scaled` — including an
+    all-zero row, whose raw zero scale both backends clamp."""
+    x, _ = _data(64, 512, jnp.float32, seed=33)
+    x = x.at[7].set(0.0)
+    s = jnp.maximum(1.3 * jnp.max(jnp.abs(x), axis=-1, keepdims=True), 0.0)
+    u = jax.random.uniform(KEY, x.shape, jnp.float32) if stochastic \
+        else None
+    out = quantize_codes_scaled(x, s, u, bits=bits, pack=pack)
+    want_codes = ref.quantize_codes_scaled_ref(x, s, bits, u)
+    if pack:
+        packed, codes = out
+        np.testing.assert_array_equal(
+            np.asarray(packed),
+            np.asarray(quantize_pack_scaled(x, s, u, bits=bits)))
+    else:
+        codes = out
+    assert codes.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(want_codes))
+    # identical to the legacy pack -> unpack_codes round trip
+    round_trip = unpack_codes(quantize_pack_scaled(x, s, u, bits=bits),
+                              bits=bits)
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(round_trip))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("r,d", [(8, 128), (64, 640)])
+def test_unpack_accumulate_matches_ref(bits, r, d):
+    """The ring's fused accumulate step: acc + unpack(packed), int32."""
+    x, _ = _data(r, d, jnp.float32, seed=41)
+    packed, _ = quantize_pack(x, bits=bits)
+    acc = jax.random.randint(jax.random.PRNGKey(43), (r, d), 0,
+                             3 * ((1 << bits) - 1)).astype(jnp.int32)
+    got = unpack_accumulate(packed, acc, bits=bits)
+    want = ref.unpack_accumulate_ref(packed, acc, bits)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # n sequential accumulations == the exact code sum (psum parity)
+    total = jnp.zeros((r, d), jnp.int32)
+    for _ in range(3):
+        total = unpack_accumulate(packed, total, bits=bits)
+    np.testing.assert_array_equal(
+        np.asarray(total), 3 * np.asarray(unpack_codes(packed, bits=bits)))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(13, 256), (37, 128)])
+def test_unpack_accumulate_ops_ragged_rows(bits, shape):
+    """Ragged (last) ring segments: the ops wrapper zero-pads rows up to
+    the block grid; padded rows accumulate zeros and are sliced off."""
+    r, d = shape
+    x = jax.random.normal(jax.random.PRNGKey(47), shape, jnp.float32)
+    packed, _ = ops.quantize_pack(x, bits=bits)
+    acc = jax.random.randint(jax.random.PRNGKey(48), shape, 0,
+                             (1 << bits)).astype(jnp.int32)
+    got = ops.unpack_accumulate(packed, acc, bits=bits)
+    want = ref.unpack_accumulate_ref(packed.reshape(r, -1),
+                                     acc.reshape(r, d), bits)
+    np.testing.assert_array_equal(np.asarray(got).reshape(r, d),
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("bits,n", [(2, 3), (2, 8), (4, 2), (4, 8),
+                                    (8, 2), (8, 5)])
+def test_pack_unpack_sums_roundtrip_and_ref(bits, n):
+    """Code-SUM packing (the ring's all-gather payload) at the narrowest
+    width holding n*(2**bits - 1): kernel == oracle, and the round trip
+    is lossless for every representable sum including the max."""
+    lv = (1 << bits) - 1
+    total = jax.random.randint(jax.random.PRNGKey(51), (32, 256), 0,
+                               n * lv + 1).astype(jnp.int32)
+    total = total.at[0, 0].set(n * lv).at[0, 1].set(0)
+    got_p = pack_sums(total, bits=bits, n=n)
+    want_p = ref.pack_sums_ref(total, bits, n)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    assert got_p.shape[-1] == Q.sum_packed_width(256, bits, n)
+    back = unpack_sums(got_p, bits=bits, n=n)
+    np.testing.assert_array_equal(np.asarray(back)[..., :256],
+                                  np.asarray(total))
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_sums_ref(got_p, bits, n))[..., :256],
+        np.asarray(total))
 
 
 @pytest.mark.parametrize("bits", [2, 4, 8])

@@ -1,18 +1,24 @@
 """Subprocess worker: the compressed DP gradient wire on host devices.
 
-The shard_map wire (`core.collectives.ef_psum_mean_bucket`: pmax-shared
-scale, fused quantize-pack, int32 code psum, fused dequant-mean, carried
-error) must match the single-process simulation
-(`core.grad_compress.compress_allreduce`) BIT-FOR-BIT given the same
-base key: the shared scale is an order-independent f32 max and the code
-accumulation is an exact int32 sum, so reduction order cannot introduce
-drift.  Checked over multiple steps (the error state telescopes through
-the wire), on both codec backends, on a single DP axis (2 ranks) AND on
-a compound pod x data axis (2 x 2 ranks — the flat row-major rank must
-drive the noise keys, `collectives._fold_axis_index`).
+BOTH shard_map wires — the i32-lane psum form
+(`core.collectives.ef_psum_mean_bucket`) and the bandwidth-optimal
+compressed ring (`core.collectives.ring_ef_reduce_mean_bucket`: packed
+b-bit code segments on rotation ppermutes, fused local
+unpack-accumulate, packed code-sum all-gather) — must match the
+single-process simulation (`core.grad_compress.compress_allreduce`)
+BIT-FOR-BIT given the same base key: the shared scale is an
+order-independent f32 max and the code accumulation is an exact int32
+sum, so neither reduction order nor the ring's segment schedule can
+introduce drift.  Checked over multiple steps (the error state
+telescopes through the wire), on both codec backends, across ring
+sizes {2, 3, 5, 8} (non-power-of-two sizes exercise the ragged last
+segment) AND on compound pod x data axes (2x2 and the non-power-of-two
+2x3 — the flat row-major rank must drive both the noise keys,
+`collectives._fold_axis_index`, and the ring rotation,
+`collectives._flat_axis_index`).
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +30,17 @@ from repro.core import grad_compress as GC
 from repro.launch.mesh import make_mesh_auto, shard_map
 
 GROUP = 128
-MESHES = [((2,), ("d",), "d"), ((2, 2), ("p", "d"), ("p", "d"))]
+# (device shape, axis names, wire axis, full matrix?) — the full
+# bits x backend matrix runs on the two canonical meshes; the other
+# ring sizes pin the schedule/raggedness with one configuration each.
+MESHES = [
+    ((2,), ("d",), "d", True),
+    ((2, 2), ("p", "d"), ("p", "d"), True),
+    ((3,), ("d",), "d", False),
+    ((5,), ("d",), "d", False),
+    ((8,), ("d",), "d", False),
+    ((2, 3), ("p", "d"), ("p", "d"), False),
+]
 
 
 def _trees(step, w):
@@ -43,14 +59,17 @@ def run_case(shape, axes, wire_axis, bits, backend):
     lay = GC.bucket_layout(_trees(0, w)[0], GROUP)
     spec = P(axes if len(axes) > 1 else axes[0])
 
-    def wire_fn(v, err, key):
-        mean, new_err = C.ef_psum_mean_bucket(
-            v[0], err[0], wire_axis, bits, key,
-            stochastic=True, backend=backend)
-        return mean[None], new_err[None]
+    def make_wire(collective):
+        def wire_fn(v, err, key):
+            mean, new_err = collective(
+                v[0], err[0], wire_axis, bits, key,
+                stochastic=True, backend=backend)
+            return mean[None], new_err[None]
+        return jax.jit(shard_map(wire_fn, mesh, (spec, spec, P()),
+                                 (spec, spec)))
 
-    wire = jax.jit(shard_map(wire_fn, mesh, (spec, spec, P()),
-                             (spec, spec)))
+    wire_psum = make_wire(C.ef_psum_mean_bucket)
+    wire_ring = make_wire(C.ring_ef_reduce_mean_bucket)
 
     @jax.jit
     def sim(trees, err, key):
@@ -58,37 +77,52 @@ def run_case(shape, axes, wire_axis, bits, backend):
                                      stochastic=True, backend=backend,
                                      layout=lay)
 
-    err_w = jnp.zeros((w, lay.rows, lay.group_d))
+    err_p = jnp.zeros((w, lay.rows, lay.group_d))
+    err_r = jnp.zeros((w, lay.rows, lay.group_d))
     err_s = jnp.zeros((w, lay.rows, lay.group_d))
     for step in range(3):
         trees = _trees(step, w)
         v = jnp.stack([GC.flatten_bucket(t, lay) for t in trees])
         key = jax.random.fold_in(jax.random.PRNGKey(7), step)
-        means, err_w = wire(v, err_w, key)
+        means_p, err_p = wire_psum(v, err_p, key)
+        means_r, err_r = wire_ring(v, err_r, key)
         mean_s, err_s = sim(trees, err_s, key)
-        # all DP ranks hold the same allreduced mean
+        # all DP ranks hold the same allreduced mean, on both wires
         for r in range(1, w):
-            np.testing.assert_array_equal(np.asarray(means[0]),
-                                          np.asarray(means[r]))
+            np.testing.assert_array_equal(np.asarray(means_p[0]),
+                                          np.asarray(means_p[r]))
+            np.testing.assert_array_equal(np.asarray(means_r[0]),
+                                          np.asarray(means_r[r]))
+        # ring == psum, bit-for-bit, over the WHOLE bucket (both wires
+        # see identical codes, sums, and scales — including the
+        # zero-pad tail)
+        np.testing.assert_array_equal(np.asarray(means_r),
+                                      np.asarray(means_p))
+        np.testing.assert_array_equal(np.asarray(err_r),
+                                      np.asarray(err_p))
         # wire == simulation, bit-for-bit: mean and error state.
         # (Only the live bucket region: the zero-pad tail holds
         # harmless nonzero dequant values on the wire — quantize(0) != 0
         # under a shared scale — and is dropped by unflatten_bucket
         # before touching the optimizer.)
-        live_w = np.asarray(means[0]).reshape(-1)[:lay.total]
+        live_w = np.asarray(means_p[0]).reshape(-1)[:lay.total]
         live_s = np.asarray(GC.flatten_bucket(mean_s, lay)
                             ).reshape(-1)[:lay.total]
         np.testing.assert_array_equal(live_w, live_s)
-        np.testing.assert_array_equal(np.asarray(err_w),
+        np.testing.assert_array_equal(np.asarray(err_p),
                                       np.asarray(err_s))
 
 
 def main():
-    for shape, axes, wire_axis in MESHES:
-        for bits in (4, 8):
-            for backend in ("reference", "pallas"):
-                run_case(shape, axes, wire_axis, bits, backend)
-                print(f"OK mesh={shape} bits={bits} backend={backend}")
+    for shape, axes, wire_axis, full in MESHES:
+        cases = [(4, "reference"), (4, "pallas"), (8, "reference"),
+                 (8, "pallas")] if full else [(4, "reference")]
+        for bits, backend in cases:
+            run_case(shape, axes, wire_axis, bits, backend)
+            print(f"OK mesh={shape} bits={bits} backend={backend}")
+    # one pallas spot-check on a non-power-of-two ring (sw=16 sum pack)
+    run_case((3,), ("d",), "d", 8, "pallas")
+    print("OK mesh=(3,) bits=8 backend=pallas")
     print("OK dp_grad")
 
 

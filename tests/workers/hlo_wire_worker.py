@@ -1,0 +1,60 @@
+"""Subprocess worker: measure the DP gradient wires' HLO collective
+bytes on a real host mesh.
+
+Compiles both shard_map collectives — the i32-lane code ``psum``
+baseline and the compressed ring — for one bucket and reports the
+collective bytes `launch/hlo_cost.py` counts in the optimized HLO,
+alongside the analytic model (`collectives.ring_wire_bytes`).  The
+assertions live in tests/test_hlo_cost.py; this worker only measures
+(a subprocess because the host device count must be set before JAX
+initializes).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives as C
+from repro.launch.hlo_cost import hlo_cost
+from repro.launch.mesh import make_mesh_auto, shard_map
+
+N = 4
+ROWS, D = 128, 256
+
+
+def measure(collective, bits):
+    mesh = make_mesh_auto((N,), ("d",))
+    spec = P("d")
+
+    def wire_fn(v, err, key):
+        mean, new_err = collective(v[0], err[0], "d", bits, key,
+                                   stochastic=False,
+                                   backend="reference")
+        return mean[None], new_err[None]
+
+    fn = jax.jit(shard_map(wire_fn, mesh, (spec, spec, P()),
+                           (spec, spec)))
+    v = jax.ShapeDtypeStruct((N, ROWS, D), jnp.float32)
+    err = jax.ShapeDtypeStruct((N, ROWS, D), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    text = fn.lower(v, err, key).compile().as_text()
+    return hlo_cost(text).coll_bytes
+
+
+def main():
+    out = {"n": N, "rows": ROWS, "d": D, "bits": {}}
+    for bits in (2, 4, 8):
+        out["bits"][str(bits)] = {
+            "psum": measure(C.ef_psum_mean_bucket, bits),
+            "ring": measure(C.ring_ef_reduce_mean_bucket, bits),
+            "model": C.ring_wire_bytes((ROWS, D), bits, n=N),
+        }
+    print("HLOWIRE " + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()
