@@ -10,15 +10,18 @@ activation-only compression (paper: up to 8.5x at 100 Mbps).
 The gradient wire measured here is the real fused path: the simulated
 trainer routes ``dp_grad_bits`` through the bucketed error-feedback
 codec of `core.grad_compress` (shared-scale fused codes-only quantize,
-int32 code accumulation, fused dequant-mean) — bit-identical to BOTH
-shard_map wires (`core.collectives.ef_psum_mean_bucket` and the
-bandwidth-optimal `ring_ef_reduce_mean_bucket`), so these convergence
-curves ARE the distributed system's curves for either ``--dp-wire``.
-Wire bytes in the throughput model are reported per wire: ``psum`` is
-the i32-lane collective at the same ring-allreduce physical convention
-as the fp32 row, ``ring`` is the exact packed-payload accounting of
-`collectives.ring_wire_bytes` (the same formula tests/test_hlo_cost.py
-pins against the traced HLO).
+int32 code accumulation, fused dequant-mean) — bit-identical to ALL
+THREE shard_map wires (`core.collectives.ef_psum_mean_bucket`, the
+bandwidth-optimal `ring_ef_reduce_mean_bucket`, and the ZeRO-sharded
+`ring_ef_reduce_scatter_bucket`), so these convergence curves ARE the
+distributed system's curves for any ``--dp-wire``.  Wire bytes in the
+throughput model are reported per wire: ``psum`` is the i32-lane
+collective at the same ring-allreduce physical convention as the fp32
+row, ``ring`` is the exact packed-payload accounting of
+`collectives.ring_wire_bytes`, and ``ring-sharded`` its
+``sharded=True`` mode (reduce-scatter half only — the formulas
+tests/test_hlo_cost.py pins against the traced HLO).  All rows count
+gradient traffic only; parameter gathers (ZeRO-3) are common.
 
 ``--tiny --json out.json`` is the CI smoke configuration: fewer steps,
 machine-readable output uploaded as a nightly artifact alongside the
@@ -77,13 +80,21 @@ def main(steps: int = 50, tiny: bool = False,
     lay = GC.bucket_layout(params_shape)
     bucket = (lay.rows, lay.group_d)
     grad_fp32 = _N * 4 * 2
+    # per-wire GRADIENT bytes only: every row excludes parameter
+    # traffic (the ZeRO-3 per-layer weight gathers are common to all
+    # wires; ring-sharded's updated-parameter all-gather replaces the
+    # gradient all-gather and is the same ZeRO-3 class of traffic)
     grad_wire = {
         "psum": (lay.rows * lay.group_d * 4 + lay.rows * 4) * 2,
         "ring": C.ring_wire_bytes(bucket, 4, n=dp_workers),
+        "ring-sharded": C.ring_wire_bytes(bucket, 4, n=dp_workers,
+                                          sharded=True),
     }
-    results["grad_wire_bytes"] = {"fp32": grad_fp32,
-                                  "q4_psum": grad_wire["psum"],
-                                  "q4_ring": grad_wire["ring"]}
+    results["grad_wire_bytes"] = {
+        "fp32": grad_fp32,
+        "q4_psum": grad_wire["psum"],
+        "q4_ring": grad_wire["ring"],
+        "q4_ring_sharded": grad_wire["ring-sharded"]}
     trows = []
     for bname, bw in BANDWIDTHS.items():
         def step_time(cc, gbytes):
@@ -95,7 +106,7 @@ def main(steps: int = 50, tiny: bool = False,
                                             bw_bits=6), grad_fp32)
         results["throughput"][bname] = {
             "fp32": MACRO / t_fp, "act_only": MACRO / t_act}
-        for wire in ("psum", "ring"):
+        for wire in ("psum", "ring", "ring-sharded"):
             t_all = step_time(CompressionConfig(mode="aqsgd", fw_bits=3,
                                                 bw_bits=6),
                               grad_wire[wire])

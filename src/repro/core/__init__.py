@@ -1,3 +1,14 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core algorithm layer: the paper's math, framework-level only.
+
+* `quantization` — the uniform quantizer Q (§4.1), dense bit-packing,
+  and the code-SUM packing of the compressed ring;
+* `boundary` — the backend-selectable fused boundary-op table every
+  wire crossing routes through (reference jnp chain | Pallas kernels);
+* `aqsgd` — Algorithm 2: message buffers and the boundary map;
+* `grad_compress` — the bucketed error-feedback gradient codec
+  (QuantizedAdam, Fig. 5) and its single-process simulations;
+* `collectives` — the three shard_map DP gradient wires (psum / ring /
+  ZeRO-sharded reduce-scatter).
+
+See docs/ARCHITECTURE.md for the full map.
+"""

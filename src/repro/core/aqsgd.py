@@ -39,6 +39,9 @@ from repro.core import quantization as Q
 
 @dataclass(frozen=True)
 class CompressionConfig:
+    """Activation-boundary compression knobs (see README "Which knob
+    do I turn"): the algorithm on the pipeline axis, code widths, the
+    optional z-bit stored-message format, and the codec backend."""
     mode: str = "aqsgd"            # fp32 | directq | aqsgd
     fw_bits: int = 4               # forward activation bits
     bw_bits: int = 8               # backward activation-gradient bits
@@ -111,6 +114,9 @@ def read_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
 
 def write_buffer(cc: CompressionConfig, bufs: dict, boundary: int,
                  sample_ids: jax.Array, m_new: jax.Array) -> dict:
+    """Store the updated messages for `sample_ids` at one boundary
+    (raw dtype, or z-bit codes + scales when ``cc.buffer_bits``) and
+    mark them seen — the write half of Algorithm 2's buffer state."""
     bufs = dict(bufs)
     if cc.buffer_bits:
         packed, scale = B.encode(m_new, bits=cc.buffer_bits,

@@ -42,6 +42,27 @@ The paper's Fig. 5 compresses *model gradients* on the DP axis
   bytes precisely; `launch/hlo_cost.py` + tests/test_hlo_cost.py pin
   them against the traced HLO.
 
+* ``ring_ef_reduce_scatter_bucket`` — the ZeRO-sharded wire: the SAME
+  ring, stopped at the segment midpoint.  After the reduce-scatter half
+  every rank already holds the exact int32 code sum of its OWN segment;
+  instead of all-gathering packed sums, each rank decodes just that
+  segment's mean (`decode_sum_mean` on one (seg, d) slice) and keeps
+  it.  No second collective half at all: the sharded wire ships only
+  the n-1 packed b-bit segment hops plus the scale ``pmax``
+  (`ring_wire_bytes(..., sharded=True)`), and the downstream optimizer
+  is expected to be partitioned to segment owners (see
+  `training/pipeline.py` ``dp_wire="ring-sharded"`` and
+  `optim/adamw.py::apply_bucket_updates`) with the parameter
+  all-gather — which ZeRO-3 performs anyway — closing the loop.
+  Because the owned segment's code sum is the SAME exact int32 sum the
+  full ring holds at its midpoint, the sharded wire's segment means are
+  BIT-IDENTICAL to the corresponding rows of `ef_psum_mean_bucket` /
+  `ring_ef_reduce_mean_bucket` / the simulator's
+  `grad_compress.compress_reduce_scatter`, including on distinct
+  per-rank (local) gradient buckets.  Padded rows of a ragged last
+  segment carry zero codes AND a zero scale, so they decode to
+  (sign-preserving) zeros on both backends.
+
 Quantization is linear given a *shared* scale, so a sum of codes
 dequantizes to the exact mean of the quantized values — the classic
 compressed-allreduce construction.  Every quantize/pack/unpack step
@@ -60,7 +81,11 @@ from repro.core import grad_compress as GC
 from repro.core import quantization as Q
 from repro.core.quantization import _EPS
 
-WIRES = ("psum", "ring")
+WIRES = ("psum", "ring", "ring-sharded")
+
+# the ONE segment-geometry source (defined next to the bucket layout
+# to avoid a circular import; both names are public API)
+ring_segment_rows = GC.ring_segment_rows
 
 
 def _axis_tuple(axis_name):
@@ -136,6 +161,93 @@ def ef_psum_mean_bucket(v_grad, err, axis_name, bits: int, key,
     return mean, new_err
 
 
+def _reduce_scatter_codes(packed, codes, n, ax, axis_name, bits,
+                          backend):
+    """The ring's reduce-scatter half, shared by the full ring and the
+    ZeRO-sharded wire: rotate packed code segments to their owners and
+    fold each arriving segment into the local int32 accumulator.
+
+    Returns (acc, seg, i): this rank's exact (seg, d) code sum of its
+    OWN segment, the segment row count, and the rank's flat ring index.
+    Padded rows of a ragged last segment carry zero payload, so they
+    accumulate zero sums."""
+    rows, d = codes.shape
+    pw = packed.shape[-1]
+    seg = ring_segment_rows(rows, n)
+    pad = seg * n - rows
+    if pad:
+        # zero payload rows: they unpack to zero codes, accumulate to
+        # zero sums, and are sliced off (full ring) or decoded against
+        # a zero scale (sharded wire) before touching the optimizer
+        packed = jnp.pad(packed, ((0, pad), (0, 0)))
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    psegs = packed.reshape(n, seg, pw)
+    csegs = codes.reshape(n, seg, d)
+    i = _flat_axis_index(axis_name)
+
+    acc = jax.lax.dynamic_index_in_dim(csegs, i, 0, keepdims=False)
+    for t in range(1, n):
+        perm = [(src, (src + t) % n) for src in range(n)]
+        send = jax.lax.dynamic_index_in_dim(psegs, (i + t) % n, 0,
+                                            keepdims=False)
+        recv = jax.lax.ppermute(send, ax, perm)
+        acc = B.accumulate_codes(recv, acc, bits=bits, backend=backend)
+    return acc, seg, i
+
+
+def ring_ef_reduce_scatter_bucket(v_grad, err, axis_name, bits: int, key,
+                                  *, stochastic: bool = True,
+                                  backend: str = "auto"):
+    """ZeRO-sharded error-feedback compressed reduce-scatter: the ring
+    stopped at the segment midpoint — each rank keeps only its OWN
+    segment's mean; there is no all-gather of sums at all.
+
+    v_grad, err: (rows, group_d) f32 — this rank's (possibly local /
+    per-rank-distinct) gradient bucket and carried full-bucket error.
+    Returns (own segment mean (seg, group_d) with
+    seg = `ring_segment_rows(rows, n)`, new error (rows, group_d)).
+    Must run inside shard_map over `axis_name` (a name or axis tuple).
+
+    The owned segment's int32 code sum is the SAME exact sum the full
+    ring holds at its midpoint, so the returned rows are bit-identical
+    to the corresponding rows of `ring_ef_reduce_mean_bucket` /
+    `ef_psum_mean_bucket` and to
+    `grad_compress.compress_reduce_scatter` in the simulator.  Rows of
+    a ragged last segment beyond the bucket decode against a ZERO
+    scale (zero codes, zero scale -> sign-preserving zeros on both
+    backends) and must be dropped by the caller before they touch
+    parameters — `training/pipeline.py` drops them when unflattening
+    the updated parameter bucket.
+
+    Error feedback stays FULL-bucket per rank: every rank encodes its
+    whole compensated bucket (it must, to ship every segment to its
+    owner), so the carried error is the same (rows, group_d) state the
+    other wires carry — only the *reduced gradient* is sharded."""
+    axes = _axis_tuple(axis_name)
+    ax = axes if len(axes) > 1 else axes[0]
+    n = jax.lax.psum(1, axis_name)
+    v = v_grad.astype(jnp.float32) + err
+    s = jnp.maximum(jax.lax.pmax(GC.local_scale(v), axis_name), _EPS)
+    packed, codes, new_err = GC.ef_encode(
+        v, s, bits, _fold_axis_index(key, axis_name),
+        stochastic=stochastic, backend=backend, pack=True)
+    if n == 1:
+        mean = B.decode_sum_mean(codes, s, bits=bits, n=1,
+                                 backend=backend)
+        return mean, new_err
+
+    acc, seg, i = _reduce_scatter_codes(packed, codes, n, ax, axis_name,
+                                        bits, backend)
+    rows = v.shape[0]
+    pad = seg * n - rows
+    s_pad = jnp.pad(s, ((0, pad), (0, 0))) if pad else s
+    s_own = jax.lax.dynamic_index_in_dim(
+        s_pad.reshape(n, seg, 1), i, 0, keepdims=False)
+    seg_mean = B.decode_sum_mean(acc, s_own, bits=bits, n=n,
+                                 backend=backend)
+    return seg_mean, new_err
+
+
 def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
                                *, stochastic: bool = True,
                                backend: str = "auto"):
@@ -172,27 +284,9 @@ def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
                                  backend=backend)
         return mean, new_err
 
+    acc, seg, i = _reduce_scatter_codes(packed, codes, n, ax, axis_name,
+                                        bits, backend)
     rows, d = v.shape
-    pw = packed.shape[-1]
-    seg = -(-rows // n)                    # segment rows (last one ragged)
-    pad = seg * n - rows
-    if pad:
-        # zero payload rows: they unpack to zero codes, accumulate to
-        # zero sums, and are sliced off before the decode
-        packed = jnp.pad(packed, ((0, pad), (0, 0)))
-        codes = jnp.pad(codes, ((0, pad), (0, 0)))
-    psegs = packed.reshape(n, seg, pw)
-    csegs = codes.reshape(n, seg, d)
-    i = _flat_axis_index(axis_name)
-
-    # ---- reduce-scatter: rotate packed code segments to their owners ----
-    acc = jax.lax.dynamic_index_in_dim(csegs, i, 0, keepdims=False)
-    for t in range(1, n):
-        perm = [(src, (src + t) % n) for src in range(n)]
-        send = jax.lax.dynamic_index_in_dim(psegs, (i + t) % n, 0,
-                                            keepdims=False)
-        recv = jax.lax.ppermute(send, ax, perm)
-        acc = B.accumulate_codes(recv, acc, bits=bits, backend=backend)
 
     # ---- all-gather: rotate the packed segment sums to everyone --------
     own = B.pack_sums(acc, bits=bits, n=n, backend=backend)
@@ -210,23 +304,30 @@ def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
     return mean, new_err
 
 
-def ring_wire_bytes(shape, bits: int, n: int = 2) -> int:
-    """Collective bytes of `ring_ef_reduce_mean_bucket` for one (rows, d)
-    bucket on an n-device ring — exact, matching what `launch/hlo_cost`
+def ring_wire_bytes(shape, bits: int, n: int = 2, *,
+                    sharded: bool = False) -> int:
+    """Collective bytes of the compressed ring for one (rows, d) bucket
+    on an n-device ring — exact, matching what `launch/hlo_cost`
     measures on the traced program (tests/test_hlo_cost.py pins this):
 
     * reduce-scatter: n-1 ppermutes of one packed b-bit segment
       (~ (n-1)/n of the bucket's packed payload per device);
-    * all-gather: n-1 ppermutes of one packed code-SUM segment at
-      b + ceil(log2 n) bits (`Q.sum_wire_bits` — the exactness
-      overhead);
+    * all-gather (full ring only): n-1 ppermutes of one packed
+      code-SUM segment at b + ceil(log2 n) bits (`Q.sum_wire_bits` —
+      the exactness overhead);
     * plus the fp32 scale ``pmax`` (one f32 per bucket row).
+
+    sharded=True models `ring_ef_reduce_scatter_bucket`: the ring
+    stopped at the midpoint, so the all-gather term vanishes and only
+    the b-bit reduce-scatter hops and the scale pmax remain — strictly
+    fewer bytes than the full ring at every b whenever n > 1.
     """
     rows, d = shape
-    seg = -(-rows // max(n, 1))
+    seg = ring_segment_rows(rows, n)
     hops = max(n - 1, 0)
+    gather = 0 if sharded else hops * seg * Q.sum_packed_width(d, bits, n)
     return (hops * seg * Q.packed_width(d, bits)
-            + hops * seg * Q.sum_packed_width(d, bits, n)
+            + gather
             + rows * 4)
 
 

@@ -43,6 +43,15 @@ from repro.core.quantization import _EPS
 DEFAULT_GROUP_D = 512          # scale-group width (bucket columns)
 
 
+def ring_segment_rows(rows: int, n: int) -> int:
+    """Rows per ring segment for an n-device ring over a rows-row
+    bucket: ceil(rows / n).  The last segment is ragged and zero-padded
+    to this width; every wire, simulator, state layout, and byte model
+    that cuts the bucket derives the segment width HERE (re-exported as
+    `collectives.ring_segment_rows`) so they cannot drift."""
+    return -(-rows // max(n, 1))
+
+
 # ---------------------------------------------------------------------------
 # bucket layout: gradient tree <-> one padded (rows, group_d) array
 # ---------------------------------------------------------------------------
@@ -188,6 +197,48 @@ def compress_allreduce(grads_list, error_state, bits: int, key,
     mean = B.decode_sum_mean(total, scale, bits=bits, n=n, backend=backend)
     return (unflatten_bucket(mean, lay, grads_list[0]),
             jnp.stack(new_err))
+
+
+def compress_reduce_scatter(grads_list, error_state, bits: int, key,
+                            *, stochastic: bool = True,
+                            backend: str = "auto",
+                            layout: BucketLayout | None = None):
+    """Simulate the ZeRO-sharded compressed reduce-scatter over n
+    workers: the allreduce stopped at the segment midpoint.
+
+    Same encode as `compress_allreduce` (identical codes, scales, and
+    error states), but instead of every worker recovering the full mean
+    bucket, worker i keeps only its OWN segment's mean — the regime of
+    `core.collectives.ring_ef_reduce_scatter_bucket`, to which this is
+    bit-identical on the same per-worker inputs (the owned segment's
+    int32 code sum is exact in any reduction order).
+
+    Returns (segment means (n, seg, group_d) with
+    seg = ceil(rows / n), new error stack (n, rows, group_d)).  Rows of
+    a ragged last segment beyond the bucket are decoded against a ZERO
+    scale — zero codes, zero scale, sign-preserving zero mean — exactly
+    as the wire decodes them; callers must drop them before parameters
+    (`unflatten_bucket` on the reassembled bucket does)."""
+    n = len(grads_list)
+    lay = layout or bucket_layout(grads_list[0])
+    v = jnp.stack([flatten_bucket(g, lay) for g in grads_list]) \
+        + error_state
+    scale = jnp.maximum(jnp.max(local_scale(v), axis=0), _EPS)
+    new_err = []
+    total = None
+    for i in range(n):
+        _, codes, e = ef_encode(v[i], scale, bits, worker_key(key, i),
+                                stochastic=stochastic, backend=backend)
+        total = codes if total is None else total + codes
+        new_err.append(e)
+    seg = ring_segment_rows(lay.rows, n)
+    pad = seg * n - lay.rows
+    if pad:
+        total = jnp.pad(total, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)))
+    means = B.decode_sum_mean(total, scale, bits=bits, n=n,
+                              backend=backend)
+    return means.reshape(n, seg, lay.group_d), jnp.stack(new_err)
 
 
 # ---------------------------------------------------------------------------

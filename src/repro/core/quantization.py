@@ -87,6 +87,8 @@ def quantize(
 
 def dequantize(codes: jax.Array, scale: jax.Array, bits: int,
                dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Map b-bit codes back to values: the center of each grid cell,
+    scaled — the inverse the whole parity contract rounds through."""
     # ((2c - levels) * scale) / levels, in this exact association: 2c -
     # levels is integer-exact in f32 (immune to FMA contraction), and the
     # trailing division cannot contract with a downstream add — so every
@@ -118,6 +120,8 @@ def qdq(
 # ---------------------------------------------------------------------------
 
 def codes_per_byte(bits: int) -> int:
+    """How many b-bit codes pack into one wire byte (byte-aligned
+    widths only)."""
     assert bits in (1, 2, 4, 8), f"packing supports 1/2/4/8 bits, got {bits}"
     return 8 // bits
 

@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Fused TPU (Pallas) kernels and their jnp oracles.
+
+`quant_pack` holds the boundary-codec kernels (one HBM pass per wire
+side), `ref` the bit-identical pure-jnp oracles, `ops` the
+ragged-row-padding wrappers callers use, and `flash_attention` the
+attention kernel family.  `REPRO_PALLAS_INTERPRET=1` (default) runs
+everything in interpret mode on CPU containers.
+"""

@@ -35,11 +35,17 @@ def main():
     ap.add_argument("--dp-workers", type=int, default=2,
                     help="simulated DP degree for --dp-grad-bits in the "
                          "single-host trainer")
-    ap.add_argument("--dp-wire", default="ring", choices=["ring", "psum"],
+    ap.add_argument("--dp-wire", default="ring",
+                    choices=["ring", "psum", "ring-sharded"],
                     help="DP gradient collective (--distributed only): "
                          "ring ships the packed b-bit codes themselves "
                          "(bandwidth-optimal); psum is the conservative "
-                         "i32-lane collective.  Bit-identical results")
+                         "i32-lane collective; ring-sharded is the ZeRO "
+                         "wire (reduce-scatter half only, segment-owner "
+                         "optimizer).  All three produce bit-identical "
+                         "gradient values (ring==psum losses are "
+                         "bit-equal; ring-sharded losses track at ulp "
+                         "level — its optimizer compiles differently)")
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -116,7 +122,11 @@ def main():
                                    // args.data_par)
     params = PL.to_pipeline_params(
         cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), args.stages)
-    state = {"params": params, "opt": adamw.init_opt_state(params)}
+    if args.dp_grad_bits and args.dp_wire == "ring-sharded":
+        opt_state = PL.init_sharded_opt(pcfg, params, args.data_par)
+    else:
+        opt_state = adamw.init_opt_state(params)
+    state = {"params": params, "opt": opt_state}
     if args.dp_grad_bits:
         state["dp_error"] = PL.init_dp_error(pcfg, params, args.data_par)
     if cc.mode == "aqsgd":

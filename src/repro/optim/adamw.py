@@ -65,6 +65,54 @@ def init_opt_state(params, state_bits: int = 0) -> dict:
             "step": jnp.zeros((), jnp.int32)}
 
 
+def init_bucket_opt_state(n_ranks: int, seg: int, group_d: int) -> dict:
+    """ZeRO-sharded moments for the ``ring-sharded`` DP wire: one
+    (seg, group_d) segment of the flattened gradient bucket per DP
+    rank, stacked (n_ranks, seg, group_d) and sharded one segment per
+    segment owner (`training/pipeline.py` places them P(data-axes)).
+
+    Replaces the per-leaf `init_opt_state` tree when the optimizer runs
+    in bucket space — each rank only ever reads and writes the moments
+    of the segment it owns."""
+    zeros = jnp.zeros((n_ranks, seg, group_d), jnp.float32)
+    return {"mu": zeros, "nu": jnp.zeros_like(zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def apply_bucket_updates(cfg: AdamWConfig, pbucket, gbucket,
+                         state) -> tuple[Any, dict]:
+    """AdamW on the flattened (n, seg, group_d) parameter bucket —
+    the segment-owner update of the ZeRO-sharded DP wire.
+
+    pbucket: f32 parameter segments (n, seg, group_d), rank i's owned
+    segment at index i; gbucket: the segment means
+    `ring_ef_reduce_scatter_bucket` left on each owner; state: from
+    `init_bucket_opt_state`.  Returns (new pbucket, new state).
+
+    The update math is ELEMENTWISE-IDENTICAL to `apply_updates` on f32
+    leaves (same ops, same association), so updating owned segments in
+    bucket space and all-gathering the parameter bucket reproduces the
+    replicated path bit-for-bit — the loss-parity anchor
+    `tests/workers/pipeline_worker.py::check_dp_wire_parity` pins.
+    Quantized moments (`state_bits`) are a per-leaf feature and are not
+    supported in bucket space."""
+    assert not cfg.state_bits, \
+        "state_bits (8-bit Adam) is per-leaf; unsupported with the " \
+        "bucket-space sharded optimizer (dp_wire='ring-sharded')"
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    g = gbucket.astype(jnp.float32)
+    mu = b1 * state["mu"] + (1 - b1) * g
+    nu = b2 * state["nu"] + (1 - b2) * jnp.square(g)
+    d = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+    d = d + cfg.weight_decay * pbucket.astype(jnp.float32)
+    new_p = pbucket.astype(jnp.float32) - lr * d
+    return new_p, {"mu": mu, "nu": nu, "step": step}
+
+
 def apply_updates(cfg: AdamWConfig, params, grads, state) -> tuple[Any, dict]:
     step = state["step"] + 1
     lr = lr_at(cfg, step)

@@ -26,18 +26,31 @@ accumulation, fused dequant-mean — with per-rank error-feedback state
 (``dp_error`` in the train state, sharded one bucket per DP rank).
 ``dp_wire`` picks the collective: the bandwidth-optimal compressed ring
 (packed b-bit codes on ``ppermute`` hops, local unpack-accumulate —
-the default) or the conservative i32-lane code ``psum``; both are
-bit-identical (see `make_dp_grad_wire`).  The wire FUNCTION is
-bit-identical to the simulator's `grad_compress.compress_allreduce`
-(tests/workers/dp_grad_worker.py feeds both distinct per-rank buckets
-and compares bit-for-bit).  Placement caveat: in THIS train step the
-bucket each rank feeds in is the gradient `jax.value_and_grad` already
-produced at the pjit level — which includes XLA's fp32 cross-data
-reduction — so the collective here performs n independent stochastic
-quantizations of the shared gradient with per-rank error feedback (the
-pure-DP / pod-axis semantics), rather than compressing per-rank partial
-gradients.  Moving the quantizer under the autodiff reduction so the
-fp32 allreduce leaves the hot path entirely is a ROADMAP item.
+the default), the conservative i32-lane code ``psum``, or the
+ZeRO-sharded ``ring-sharded`` (the ring stopped at its reduce-scatter
+midpoint: each rank keeps only its owned segment's mean, AdamW runs in
+bucket space on segment owners — `adamw.apply_bucket_updates` with
+moments partitioned one segment per rank — and the f32 UPDATED
+parameter segments all-gather explicitly inside
+`make_dp_sharded_update`, the gather ZeRO trades for the gradient
+all-gather); all three produce
+bit-identical gradient values (see `make_dp_grad_wire` /
+`make_dp_sharded_update`).  The wire FUNCTIONS are
+bit-identical to the simulator's `grad_compress.compress_allreduce` /
+`compress_reduce_scatter` (tests/workers/dp_grad_worker.py feeds them
+DISTINCT per-rank buckets — the local-gradient regime — and compares
+bit-for-bit, so the wires, the error-feedback layout, and the sharded
+optimizer state are all proven on per-rank partial gradients; the
+simulator's ``dp_sharded`` mode runs that full ZeRO loop on genuinely
+distinct per-worker gradients).  Placement caveat: in THIS train step
+the bucket each rank feeds in is the gradient `jax.value_and_grad`
+already produced at the pjit level — which includes XLA's fp32
+cross-data reduction — so the collective performs n independent
+stochastic quantizations of the shared gradient with per-rank error
+feedback (the pure-DP / pod-axis semantics).  That placement is what
+keeps all three wires loss-identical end-to-end; feeding the pipeline
+wire from pre-reduction local cotangents (a custom_vjp on
+`gather_fsdp` / a shard_map'd per-rank loss) remains a ROADMAP item.
 
 Message buffers: each device holds ``m_out`` (its outgoing boundary) and
 ``m_in`` (a replica of the upstream stage's buffer).  Both sides apply
@@ -92,8 +105,11 @@ class PipelineConfig:
     dp_grad_group: int = GC.DEFAULT_GROUP_D  # gradient-bucket group width
     dp_wire: str = "ring"           # ring: packed b-bit codes on the wire
                                     # (bandwidth-optimal); psum: i32-lane
-                                    # collective (conservative baseline).
-                                    # Bit-identical results either way.
+                                    # collective (conservative baseline);
+                                    # ring-sharded: ZeRO — reduce-scatter
+                                    # half only, segment-owner optimizer.
+                                    # Bit-identical gradient values on
+                                    # all three.
     moe_mode: str = "zero3"         # zero3 | expert_parallel (§Perf)
     remat_mode: str = "nested"      # nested | layer (§Perf: nested saves
                                     # HBM, layer saves one fwd recompute)
@@ -355,6 +371,27 @@ def make_transfer(mode: str, fw_bits: int, bw_bits: int, stochastic: bool,
 # DP gradient wire (error-feedback compressed allreduce, paper Fig. 5)
 # ---------------------------------------------------------------------------
 
+def replicate_leaves(mesh, tree):
+    """Pin every leaf of `tree` to a fully-replicated sharding.
+
+    GSPMD workaround (jax 0.4.x, meshes with a model axis):
+    ``jnp.concatenate`` of differently-sharded flattened leaves — the
+    exact shape of `grad_compress.flatten_bucket` on the gradient or
+    parameter tree — miscompiles and DOUBLES the values of multi-axis
+    sharded leaves (the partitioner treats the replicas it gathers as
+    partial sums).  Constraining each leaf replicated before the
+    reshape+concat forces a plain all-gather first, which is what the
+    wire's P(None, None) bucket input needs anyway.  The ring-sharded
+    loss-parity worker (tests/workers/pipeline_worker.py
+    ``check_dp_wire_parity``) regresses this: without the constraint
+    the DP bucket ships 2x gradients on any mesh with model > 1."""
+    def rep(leaf):
+        spec = P(*([None] * leaf.ndim))
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+    return jax.tree.map(rep, tree)
+
+
 def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
     """shard_map'd compressed gradient allreduce over the DP axes.
 
@@ -387,7 +424,11 @@ def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
     module docstring's placement caveat.)"""
     daxes = data_axes(mesh)
     axis = daxes if len(daxes) > 1 else daxes[0]
-    assert pcfg.dp_wire in C.WIRES, pcfg.dp_wire
+    # ring-sharded has no standalone mean-producing wire at this level:
+    # its segment mean must stay inside the shard_map that consumes it
+    # (`make_dp_sharded_update`), so this factory only serves the
+    # full-mean wires.
+    assert pcfg.dp_wire in ("psum", "ring"), pcfg.dp_wire
     collective = C.ring_ef_reduce_mean_bucket if pcfg.dp_wire == "ring" \
         else C.ef_psum_mean_bucket
 
@@ -402,13 +443,90 @@ def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
                      (P(None, None), P(axis, None, None)))
 
 
+def make_dp_sharded_update(mesh, pcfg: "PipelineConfig",
+                           cc: CompressionConfig,
+                           opt_cfg: adamw.AdamWConfig, glayout):
+    """The fused ZeRO step for ``dp_wire="ring-sharded"``: compressed
+    reduce-scatter + segment-owner AdamW + parameter all-gather, all
+    inside ONE shard_map over the DP axes.
+
+    Per DP rank: ship the packed b-bit codes of every segment to its
+    owner (`C.ring_ef_reduce_scatter_bucket`), decode only the owned
+    segment's mean, update the owned (seg, group_d) slices of the
+    parameter bucket and the AdamW moments
+    (`adamw.apply_bucket_updates` — moments never exist unsharded),
+    then ``all_gather`` the UPDATED f32 parameter segments so every
+    rank leaves with the full new bucket.  That gather is the ZeRO
+    parameter all-gather that replaces the gradient all-gather — it is
+    an explicit collective here (visible to `launch/hlo_cost`), and the
+    full-bucket output is genuinely replicated on every device, so the
+    pjit-level unflatten consumes a clean P(None, None) array exactly
+    like the full ring's mean.  (Keeping the segment mean INSIDE the
+    shard_map matters: handing a data-sharded, model-unmentioned wire
+    output back to GSPMD for the optimizer arithmetic lets the
+    partitioner introduce cross-model reductions of values it believes
+    are partial — the bit-parity worker caught exactly that.)
+
+    Returns update(bucket, dp_error, pbucket, mu, nu, step, key) ->
+    (new full bucket (rows, group_d), new dp_error, new mu, new nu,
+    new step); pbucket/mu/nu are (n_ranks, seg, group_d) stacks sharded
+    one segment per rank."""
+    daxes = data_axes(mesh)
+    axis = daxes if len(daxes) > 1 else daxes[0]
+    rows = glayout.rows
+
+    def upd(g2d, err, pb, mu, nu, step, key):
+        seg_mean, new_err = C.ring_ef_reduce_scatter_bucket(
+            g2d, err[0], axis, pcfg.dp_grad_bits, key,
+            stochastic=cc.stochastic, backend=cc.backend)
+        new_pseg, new_opt = adamw.apply_bucket_updates(
+            opt_cfg, pb[0], seg_mean,
+            {"mu": mu[0], "nu": nu[0], "step": step})
+        full = jax.lax.all_gather(new_pseg, axis, axis=0,
+                                  tiled=True)[:rows]
+        return (full, new_err[None], new_opt["mu"][None],
+                new_opt["nu"][None], new_opt["step"])
+
+    seg_spec = P(axis, None, None)
+    return shard_map(upd, mesh,
+                     (P(None, None), seg_spec, seg_spec, seg_spec,
+                      seg_spec, P(), P()),
+                     (P(None, None), seg_spec, seg_spec, seg_spec, P()))
+
+
 def init_dp_error(pcfg: "PipelineConfig", params, n_ranks: int):
     """Initial per-rank error-feedback stack (n_ranks, rows, group_d) —
     the one place that ties the stack depth to the mesh's DP product and
     the bucket width to `pcfg.dp_grad_group`, so callers cannot drift
-    from the layout `make_train_step` traces against."""
+    from the layout `make_train_step` traces against.
+    (`make_state_structs` derives its dp_error struct by eval_shape of
+    THIS function, and tests/test_grad_compress.py pins the layout on
+    every mesh the workers exercise.)
+
+    The error stays full-bucket per rank under EVERY wire, including
+    ``ring-sharded``: each rank encodes its whole compensated bucket
+    (it ships every segment to that segment's owner), so only the
+    *reduced gradient* and the optimizer state are segment-sharded."""
     err = GC.init_error_state(params, pcfg.dp_grad_group)
     return jnp.stack([err] * n_ranks)
+
+
+def dp_bucket_segment(pcfg: "PipelineConfig", params, n_ranks: int) -> int:
+    """Segment rows of the ZeRO-sharded gradient bucket: the single
+    source for the (n_ranks, seg, group_d) layout shared by the wire
+    output, `adamw.init_bucket_opt_state`, and the pjit sharding
+    specs."""
+    lay = GC.bucket_layout(params, pcfg.dp_grad_group)
+    return C.ring_segment_rows(lay.rows, n_ranks)
+
+
+def init_sharded_opt(pcfg: "PipelineConfig", params, n_ranks: int) -> dict:
+    """Segment-partitioned AdamW state for ``dp_wire="ring-sharded"``:
+    (n_ranks, seg, group_d) moment buckets, one owned segment per DP
+    rank (placed P(data-axes) by `make_train_step`'s state specs).
+    Replaces `adamw.init_opt_state`'s per-leaf tree in sharded mode."""
+    seg = dp_bucket_segment(pcfg, params, n_ranks)
+    return adamw.init_bucket_opt_state(n_ranks, seg, pcfg.dp_grad_group)
 
 
 # ---------------------------------------------------------------------------
@@ -696,9 +814,15 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     pipeline_fn = make_pipeline_fn(cfg, pcfg, lay, layer_dims, shared_dims,
                                    exp_axes, Df)
     flags = layer_flags(cfg, lay, trunk_seq)
+    dp_sharded = pcfg.dp_grad_bits and pcfg.dp_wire == "ring-sharded"
     if pcfg.dp_grad_bits:
         glayout = GC.bucket_layout(params_shape, pcfg.dp_grad_group)
-        dp_wire = make_dp_grad_wire(mesh, pcfg, cc)
+        dp_seg = C.ring_segment_rows(glayout.rows, D)
+        if dp_sharded:
+            dp_update = make_dp_sharded_update(mesh, pcfg, cc, opt_cfg,
+                                               glayout)
+        else:
+            dp_wire = make_dp_grad_wire(mesh, pcfg, cc)
 
     # ---- shard_map specs -------------------------------------------------
     def _stage_pspec(leaf):
@@ -807,16 +931,41 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
 
         (loss, (nmo, nmi)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
-        if pcfg.dp_grad_bits:
-            bucket = GC.flatten_bucket(grads, glayout)
-            mean, new_dp_err = dp_wire(bucket, state["dp_error"],
-                                       jax.random.fold_in(key, 977))
-            grads = GC.unflatten_bucket(mean, glayout, grads)
-        new_params, new_opt = adamw.apply_updates(
-            opt_cfg, params, grads, state["opt"])
-        new_state = {"params": new_params, "opt": new_opt}
-        if pcfg.dp_grad_bits:
-            new_state["dp_error"] = new_dp_err
+        if dp_sharded:
+            # ZeRO-sharded path: compressed reduce-scatter, segment-
+            # owner AdamW, and the parameter all-gather all run inside
+            # `make_dp_sharded_update`'s shard_map; only the (cheap)
+            # flatten/unflatten between leaf layout and bucket layout
+            # happens at the pjit level.
+            bucket = GC.flatten_bucket(replicate_leaves(mesh, grads),
+                                       glayout)
+            pb = GC.flatten_bucket(replicate_leaves(mesh, params),
+                                   glayout)
+            pad = dp_seg * D - glayout.rows
+            if pad:
+                pb = jnp.pad(pb, ((0, pad), (0, 0)))
+            pb = pb.reshape(D, dp_seg, glayout.group_d)
+            opt = state["opt"]
+            new_pb, new_dp_err, new_mu, new_nu, new_step = dp_update(
+                bucket, state["dp_error"], pb, opt["mu"], opt["nu"],
+                opt["step"], jax.random.fold_in(key, 977))
+            new_params = GC.unflatten_bucket(new_pb, glayout, params)
+            new_state = {"params": new_params,
+                         "opt": {"mu": new_mu, "nu": new_nu,
+                                 "step": new_step},
+                         "dp_error": new_dp_err}
+        else:
+            if pcfg.dp_grad_bits:
+                bucket = GC.flatten_bucket(
+                    replicate_leaves(mesh, grads), glayout)
+                mean, new_dp_err = dp_wire(bucket, state["dp_error"],
+                                           jax.random.fold_in(key, 977))
+                grads = GC.unflatten_bucket(mean, glayout, grads)
+            new_params, new_opt = adamw.apply_updates(
+                opt_cfg, params, grads, state["opt"])
+            new_state = {"params": new_params, "opt": new_opt}
+            if pcfg.dp_grad_bits:
+                new_state["dp_error"] = new_dp_err
         if has_bufs:
             new_state["m_out"] = nmo
             new_state["m_in"] = nmi
@@ -824,7 +973,13 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
 
     # ---- state / batch specs (pjit level) ----------------------------------
     pspecs = pipeline_param_specs(mesh, params_shape)
-    if opt_cfg.state_bits:
+    if dp_sharded:
+        # segment-partitioned bucket moments: one owned segment per DP
+        # rank, the same placement pattern as dp_error
+        seg_sh = NamedSharding(mesh, P(d_ax, None, None))
+        opt_specs = {"mu": seg_sh, "nu": seg_sh,
+                     "step": NamedSharding(mesh, P())}
+    elif opt_cfg.state_bits:
         def qspec(ns):
             scale_spec = P(*ns.spec[:-1], None) if len(ns.spec) else P()
             return {"codes": ns, "scale": NamedSharding(mesh, scale_spec)}
@@ -833,8 +988,9 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                                         x, NamedSharding))
     else:
         moment_specs = pspecs
-    opt_specs = {"mu": moment_specs, "nu": moment_specs,
-                 "step": NamedSharding(mesh, P())}
+    if not dp_sharded:
+        opt_specs = {"mu": moment_specs, "nu": moment_specs,
+                     "step": NamedSharding(mesh, P())}
     state_specs = {"params": pspecs, "opt": opt_specs}
     if pcfg.dp_grad_bits:
         state_specs["dp_error"] = NamedSharding(mesh, P(d_ax, None, None))
@@ -877,25 +1033,32 @@ def make_state_structs(cfg: ModelConfig, pcfg: PipelineConfig, meta,
     dt = cfg.jax_dtype
     params = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(s.shape, dt), meta["params_shape"])
-    if opt_state_bits:
-        def qstruct(s):
-            return {"codes": jax.ShapeDtypeStruct(s.shape, jnp.uint8),
-                    "scale": jax.ShapeDtypeStruct(
-                        (*s.shape[:-1], 1), jnp.float32)}
-        moments = jax.tree.map(qstruct, params)
+    daxes = data_axes(mesh)
+    D = int(np.prod([mesh.shape[a] for a in daxes]))
+    if pcfg.dp_grad_bits and pcfg.dp_wire == "ring-sharded":
+        # segment-partitioned bucket moments (one segment per DP rank)
+        opt = jax.eval_shape(lambda p: init_sharded_opt(pcfg, p, D),
+                             meta["params_shape"])
     else:
-        moments = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
-    opt = {"mu": moments, "nu": moments,
-           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        if opt_state_bits:
+            def qstruct(s):
+                return {"codes": jax.ShapeDtypeStruct(s.shape, jnp.uint8),
+                        "scale": jax.ShapeDtypeStruct(
+                            (*s.shape[:-1], 1), jnp.float32)}
+            moments = jax.tree.map(qstruct, params)
+        else:
+            moments = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                params)
+        opt = {"mu": moments, "nu": moments,
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
     state = {"params": params, "opt": opt}
     if pcfg.dp_grad_bits:
-        daxes = data_axes(mesh)
-        D = int(np.prod([mesh.shape[a] for a in daxes]))
-        glayout = GC.bucket_layout(meta["params_shape"],
-                                   pcfg.dp_grad_group)
-        state["dp_error"] = jax.ShapeDtypeStruct(
-            (D, glayout.rows, glayout.group_d), jnp.float32)
+        # derived by eval_shape of the ONE init function so the struct
+        # cannot drift from the layout `make_train_step` traces against
+        # (tests/test_grad_compress.py pins this on the worker meshes)
+        state["dp_error"] = jax.eval_shape(
+            lambda p: init_dp_error(pcfg, p, D), meta["params_shape"])
     if pcfg.compression.mode == "aqsgd":
         K = mesh.shape["model"]
         daxes = data_axes(mesh)

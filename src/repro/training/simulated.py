@@ -26,6 +26,18 @@ and accumulated as int32 codes — the identical math the shard_map
 pipeline's `core.collectives.ef_psum_mean_bucket` wire executes, so this
 simulation is bit-faithful to the distributed gradient wire (int32 code
 sums are exact in any reduction order).
+
+``dp_sharded=True`` simulates the ZeRO-sharded wire end-to-end: the
+allreduce stops at the reduce-scatter midpoint
+(`grad_compress.compress_reduce_scatter` — worker i keeps only its
+owned segment's mean), AdamW runs in bucket space on segment owners
+(`optim.adamw.apply_bucket_updates`, moments one segment per worker),
+and the updated parameter bucket is reassembled — the same loop
+`training/pipeline.py` runs under ``dp_wire="ring-sharded"``, here on
+genuinely DISTINCT per-worker gradients.  Losses are bit-identical to
+the ``dp_sharded=False`` path while trajectories coincide and track at
+ulp level after (cross-program XLA fusion noise, not codec
+divergence) — pinned by tests/test_grad_compress.py.
 """
 from __future__ import annotations
 
@@ -53,15 +65,27 @@ class SimTrainConfig:
     dp_grad_bits: int = 0           # 0 = off
     dp_workers: int = 1             # simulated DP degree when dp_grad_bits>0
     dp_grad_group: int = grad_compress.DEFAULT_GROUP_D  # scale-group width
+    dp_sharded: bool = False        # ZeRO: reduce-scatter wire + bucket
+                                    # AdamW on segment owners (bit-identical
+                                    # losses to the allreduce path)
     remat: bool = False
 
 
 def init_train_state(mcfg: ModelConfig, tcfg: SimTrainConfig,
                      num_samples: int, seq_len: int, key) -> dict:
     params = Mo.init_params(mcfg, key)
+    if tcfg.dp_grad_bits and tcfg.dp_sharded:
+        # ZeRO sim: segment-partitioned bucket moments, one per worker
+        lay = grad_compress.bucket_layout(params, tcfg.dp_grad_group)
+        seg = grad_compress.ring_segment_rows(lay.rows,
+                                              tcfg.dp_workers)
+        opt = adamw.init_bucket_opt_state(tcfg.dp_workers, seg,
+                                          lay.group_d)
+    else:
+        opt = adamw.init_opt_state(params)
     state = {
         "params": params,
-        "opt": adamw.init_opt_state(params),
+        "opt": opt,
         "buffers": aqsgd.init_buffers(
             tcfg.compression, tcfg.num_stages - 1, num_samples, seq_len,
             mcfg.d_model),
@@ -107,7 +131,7 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
         lambda p: _loss_with_boundaries(p, mcfg, tcfg, batch, m_all,
                                         seen_all, key), has_aux=True)
 
-    if tcfg.dp_grad_bits and tcfg.dp_workers > 1:
+    if tcfg.dp_grad_bits and (tcfg.dp_workers > 1 or tcfg.dp_sharded):
         # Fig. 5 mode: split the batch over simulated DP workers, then
         # run the bucketed error-feedback compressed allreduce over the
         # per-worker gradient trees — bit-faithful to the shard_map wire
@@ -131,11 +155,21 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
             loss = loss + l / w
             ce = ce + met["ce"] / w
             new_ms_parts.append(met["boundary_state"])
-        grads, new_err = grad_compress.compress_allreduce(
-            glist, state["dp_error"], tcfg.dp_grad_bits,
-            jax.random.fold_in(key, 2000), backend=cc.backend,
-            layout=grad_compress.bucket_layout(glist[0],
-                                               tcfg.dp_grad_group))
+        glay = grad_compress.bucket_layout(glist[0], tcfg.dp_grad_group)
+        if tcfg.dp_sharded:
+            # ZeRO sim: stop at the reduce-scatter midpoint — worker i
+            # keeps only its owned segment's mean; the bucket-space
+            # optimizer below updates owned segments and reassembles.
+            seg_means, new_err = grad_compress.compress_reduce_scatter(
+                glist, state["dp_error"], tcfg.dp_grad_bits,
+                jax.random.fold_in(key, 2000), backend=cc.backend,
+                layout=glay)
+            grads = seg_means
+        else:
+            grads, new_err = grad_compress.compress_allreduce(
+                glist, state["dp_error"], tcfg.dp_grad_bits,
+                jax.random.fold_in(key, 2000), backend=cc.backend,
+                layout=glay)
         new_state_extra = {"dp_error": new_err}
         if cc.mode == "aqsgd":
             # workers own disjoint batch shards; concat their new messages
@@ -159,8 +193,27 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
         (loss, metrics), grads = grad_fn(state["params"])
         new_state_extra = {}
 
-    params, opt = adamw.apply_updates(
-        tcfg.optimizer, state["params"], grads, state["opt"])
+    if tcfg.dp_grad_bits and tcfg.dp_sharded:
+        # segment-owner update in bucket space + parameter reassembly
+        # (the sim analogue of the pipeline's parameter all-gather):
+        # bit-identical losses to the allreduce + per-leaf AdamW path
+        w = tcfg.dp_workers
+        lay = grad_compress.bucket_layout(state["params"],
+                                          tcfg.dp_grad_group)
+        seg = grad_compress.ring_segment_rows(lay.rows, w)
+        pb = grad_compress.flatten_bucket(state["params"], lay)
+        pad = seg * w - lay.rows
+        if pad:
+            pb = jnp.pad(pb, ((0, pad), (0, 0)))
+        new_pb, opt = adamw.apply_bucket_updates(
+            tcfg.optimizer, pb.reshape(w, seg, lay.group_d), grads,
+            state["opt"])
+        params = grad_compress.unflatten_bucket(
+            new_pb.reshape(w * seg, lay.group_d)[:lay.rows], lay,
+            state["params"])
+    else:
+        params, opt = adamw.apply_updates(
+            tcfg.optimizer, state["params"], grads, state["opt"])
 
     if cc.mode == "aqsgd":
         new_ms = metrics.pop("boundary_state")

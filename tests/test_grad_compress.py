@@ -241,6 +241,196 @@ def test_compress_allreduce_bit_identical_across_backends(bits, stoch):
             np.asarray(m_p[k].astype(jnp.float32)), err_msg=k)
 
 
+@pytest.mark.parametrize("n", [2, 3, 5])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_compress_reduce_scatter_matches_allreduce(n, backend):
+    """The ZeRO-sharded sim extension: `compress_reduce_scatter`'s
+    owned segments must be BIT-EQUAL to the corresponding rows of
+    `compress_allreduce`'s full mean (same codes, same int32 segment
+    sums), its error states identical, and the zero-scale pad rows of
+    a ragged last segment must decode to (sign-preserving) zeros.
+    n=3/5 exercise ragged segments.  (All-f32 trees: the allreduce
+    returns a TREE, so its bf16 leaves would round before this
+    comparison re-flattens them, while the sharded form returns the
+    raw f32 bucket — the bf16 round-trip is covered by the backend
+    parity tests above.)"""
+    bits = 4
+    trees = [jax.tree.map(lambda a: a.astype(jnp.float32),
+                          _tree(seed=40 + i)) for i in range(n)]
+    lay = GC.bucket_layout(trees[0], GROUP)
+    err0 = jnp.stack([GC.init_error_state(trees[0], GROUP)] * n)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(err, key):
+        full = GC.compress_allreduce(trees, err, bits, key,
+                                     stochastic=True, backend=backend,
+                                     layout=lay)
+        shrd = GC.compress_reduce_scatter(trees, err, bits, key,
+                                          stochastic=True,
+                                          backend=backend, layout=lay)
+        return full, shrd
+    (mean, e_full), (segs, e_shrd) = run(err0, KEY)
+    np.testing.assert_array_equal(np.asarray(e_full),
+                                  np.asarray(e_shrd))
+    seg = segs.shape[1]
+    assert seg == -(-lay.rows // n)
+    # live region only: the bucket's zero-pad TAIL (beyond lay.total)
+    # holds harmless nonzero dequant values on the sharded bucket —
+    # quantize(0) != 0 under a shared scale — which the allreduce tree
+    # round-trip already dropped; both drop it before parameters.
+    flat_live = np.asarray(GC.flatten_bucket(mean, lay)
+                           ).reshape(-1)[:lay.total]
+    sg_live = np.asarray(segs).reshape(-1)[:lay.total]
+    np.testing.assert_array_equal(sg_live, flat_live)
+    pad = seg * n - lay.rows
+    if pad:
+        # fully-padded rows (beyond lay.rows) decode against a ZERO
+        # scale: sign-preserving zeros
+        np.testing.assert_array_equal(
+            np.abs(np.asarray(segs)[-1, seg - pad:]),
+            np.zeros((pad, lay.group_d)))
+
+
+def test_sim_zero_sharded_training_parity():
+    """The simulated trainer's ZeRO mode (``dp_sharded=True``:
+    `compress_reduce_scatter` + segment-owner `apply_bucket_updates` +
+    parameter reassembly) tracks the allreduce + per-leaf AdamW path on
+    DISTINCT per-worker gradients: bit-identical losses while the
+    trajectories coincide, ulp-level tracking after (the two jitted
+    programs fuse the model backward differently — the documented
+    cross-program drift class of core/boundary.py, not codec or
+    optimizer divergence: `apply_bucket_updates` is pinned elementwise
+    bit-identical to `apply_updates` below)."""
+    from repro.configs.base import get_config
+    from repro.core.aqsgd import CompressionConfig
+    from repro.data.pipeline import Dataset, DatasetConfig
+    from repro.training import simulated as sim
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = get_config("gpt2-xl-paper", smoke=True).with_(num_layers=2)
+    dc = DatasetConfig(num_samples=8, seq_len=16,
+                       vocab_size=cfg.vocab_size, kind="synthetic-lm")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+    out = {}
+    for sh in (False, True):
+        tcfg = sim.SimTrainConfig(
+            num_stages=2,
+            compression=CompressionConfig(mode="aqsgd", fw_bits=4,
+                                          bw_bits=8),
+            optimizer=opt, dp_grad_bits=4, dp_workers=2, dp_sharded=sh)
+        _, losses = sim.train(cfg, tcfg, Dataset(dc), num_steps=4,
+                              batch_size=4, key=jax.random.PRNGKey(0))
+        out[sh] = losses
+    assert out[True][:2] == out[False][:2], out
+    np.testing.assert_allclose(out[True], out[False], rtol=2e-3)
+
+
+def test_bucket_adamw_bit_identical_to_leaf_adamw():
+    """`adamw.apply_bucket_updates` (the segment-owner update of the
+    ring-sharded wire) is ELEMENTWISE bit-identical to the per-leaf
+    `apply_updates` over chained steps — the anchor that lets the
+    sharded pipeline reproduce the replicated optimizer bit-for-bit on
+    the same gradient stream."""
+    from repro.optim import adamw
+    from repro.optim.adamw import AdamWConfig
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    tree = _tree(seed=50)
+    tree = jax.tree.map(lambda a: a.astype(jnp.float32), tree)
+    grads = jax.tree.map(lambda a: a * 0.01, tree)
+    lay = GC.bucket_layout(tree, GROUP)
+    w = 2
+    seg = -(-lay.rows // w)
+    pad = seg * w - lay.rows
+
+    @jax.jit
+    def leaf_steps(params, grads):
+        st = adamw.init_opt_state(params)
+        for _ in range(3):
+            params, st = adamw.apply_updates(cfg, params, grads, st)
+        return params
+
+    @jax.jit
+    def bucket_steps(params, grads):
+        st = adamw.init_bucket_opt_state(w, seg, lay.group_d)
+        gb = GC.flatten_bucket(grads, lay)
+        if pad:
+            gb = jnp.pad(gb, ((0, pad), (0, 0)))
+        gb = gb.reshape(w, seg, lay.group_d)
+        for _ in range(3):
+            pb = GC.flatten_bucket(params, lay)
+            if pad:
+                pb = jnp.pad(pb, ((0, pad), (0, 0)))
+            new_pb, st = adamw.apply_bucket_updates(
+                cfg, pb.reshape(w, seg, lay.group_d), gb, st)
+            params = GC.unflatten_bucket(
+                new_pb.reshape(w * seg, lay.group_d)[:lay.rows], lay,
+                params)
+        return params
+
+    a, b = leaf_steps(tree, grads), bucket_steps(tree, grads)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=k)
+
+
+@pytest.mark.parametrize("n_ranks,daxes", [
+    (2, ("data",)), (3, ("data",)), (5, ("data",)), (8, ("data",)),
+    (4, ("pod", "data")), (6, ("pod", "data")),
+])
+def test_dp_error_layout_matches_train_step(n_ranks, daxes):
+    """Layout-drift gate for the sharded DP carries: on every mesh
+    shape the workers exercise, `init_dp_error` (what launchers
+    allocate) and `make_state_structs` (what `make_train_step` traces
+    against) must agree on the dp_error shape, and `init_sharded_opt`
+    must produce exactly one `ring_segment_rows` segment per DP rank —
+    so the sharded carry cannot silently desync from the wire's
+    segment schedule."""
+    from types import SimpleNamespace
+    from repro.configs.base import get_config
+    from repro.core import collectives as C
+    from repro.models import model as Mo
+    from repro.training import pipeline as PL
+
+    cfg = get_config("gpt2-xl-paper", smoke=True).with_(num_layers=2)
+    pcfg = PL.PipelineConfig(dp_grad_bits=4, dp_wire="ring-sharded")
+    params_shape = jax.eval_shape(
+        lambda: PL.to_pipeline_params(
+            cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), 2))
+    lay = GC.bucket_layout(params_shape, pcfg.dp_grad_group)
+
+    err = jax.eval_shape(
+        lambda: PL.init_dp_error(pcfg, params_shape, n_ranks))
+    assert err.shape == (n_ranks, lay.rows, lay.group_d), err
+
+    # make_state_structs must derive the identical struct (it calls
+    # eval_shape of the same init functions — pinned here so a future
+    # re-derivation cannot drift)
+    shape = {"model": 2}
+    if daxes == ("data",):
+        shape["data"] = n_ranks
+        names = ("data", "model")
+    else:
+        shape["pod"], shape["data"] = 2, n_ranks // 2
+        names = ("pod", "data", "model")
+    mesh = SimpleNamespace(axis_names=names, shape=shape)
+    meta = {"params_shape": params_shape, "m": 2, "trunk_seq": 16,
+            "buffer_samples": 2}
+    state, _, _ = PL.make_state_structs(
+        cfg, pcfg, meta, mesh, global_batch=2 * n_ranks, seq_len=16)
+    assert state["dp_error"].shape == err.shape
+    assert state["dp_error"].dtype == jnp.float32
+
+    seg = C.ring_segment_rows(lay.rows, n_ranks)
+    opt = jax.eval_shape(
+        lambda: PL.init_sharded_opt(pcfg, params_shape, n_ranks))
+    assert opt["mu"].shape == (n_ranks, seg, lay.group_d), opt["mu"]
+    assert state["opt"]["mu"].shape == opt["mu"].shape
+    # ceil-division minimality: covers the bucket, one fewer row per
+    # segment would not
+    assert seg * n_ranks >= lay.rows
+    assert (seg - 1) * n_ranks < lay.rows
+
+
 @pytest.mark.parametrize("bits", [4, 8])
 def test_compress_allreduce_tracks_true_mean(bits):
     """Deterministic sanity: the compressed mean is within one

@@ -1,7 +1,8 @@
 """Validate the loop-aware HLO cost parser against ground truth:
 fully-unrolled compiles (where XLA's own cost_analysis is exact) —
-and pin the compressed ring collective's wire bytes against both the
-analytic model and the i32-psum baseline (the PR's perf claim)."""
+and pin the compressed ring collectives' wire bytes against the
+analytic models and the i32-psum baseline (the perf claims)."""
+import functools
 import json
 
 import jax
@@ -90,6 +91,38 @@ def test_collective_bytes_counted_with_trips():
     assert cost.coll["all-reduce"] in (0.0, pytest.approx(expected))
 
 
+@functools.lru_cache(maxsize=1)
+def _wire_measurements():
+    """One hlo_wire_worker run shared by both wire regressions (the
+    subprocess compiles all three collectives at three widths — the
+    slowest part of this module)."""
+    stdout = run_worker("hlo_wire_worker.py", "run", timeout=900)
+    line = [ln for ln in stdout.splitlines()
+            if ln.startswith("HLOWIRE ")][0]
+    return json.loads(line[len("HLOWIRE "):])
+
+
+def test_sharded_wire_collective_bytes_regression():
+    """The ZeRO-sharded wire (`ring_ef_reduce_scatter_bucket`) stops at
+    the reduce-scatter midpoint, so its HLO collective bytes must
+    (a) match `collectives.ring_wire_bytes(..., sharded=True)` EXACTLY
+    — only the n-1 packed b-bit segment hops plus the f32 scale pmax —
+    and (b) be STRICTLY fewer than the full ring's at every tested b
+    (the all-gather of packed code sums vanishes entirely)."""
+    out = _wire_measurements()
+    n, rows, d = out["n"], out["rows"], out["d"]
+    seg = -(-rows // n)
+    for bits in (2, 4, 8):
+        row = out["bits"][str(bits)]
+        assert row["sharded"] == row["model_sharded"], (bits, row)
+        # exactly the reduce-scatter half: packed payload + scale pmax
+        assert row["model_sharded"] == \
+            (n - 1) * seg * Q.packed_width(d, bits) + rows * 4, \
+            (bits, row)
+        assert row["sharded"] < row["ring"], (bits, row)
+        assert row["sharded"] < row["psum"], (bits, row)
+
+
 def test_ring_wire_collective_bytes_regression():
     """The compressed ring collective must genuinely ship the b-bit
     payload: its HLO collective bytes must (a) match the analytic model
@@ -99,10 +132,7 @@ def test_ring_wire_collective_bytes_regression():
     all-gather at b + ceil(log2 n) bits, and the f32 scale pmax both
     wires pay).  Compiled on a real 4-host-device mesh in a subprocess
     (device count must precede JAX init)."""
-    stdout = run_worker("hlo_wire_worker.py", "run", timeout=600)
-    line = [ln for ln in stdout.splitlines()
-            if ln.startswith("HLOWIRE ")][0]
-    out = json.loads(line[len("HLOWIRE "):])
+    out = _wire_measurements()
     n, rows, d = out["n"], out["rows"], out["d"]
     seg = -(-rows // n)
     scale_bytes = rows * 4

@@ -1,15 +1,21 @@
-"""Subprocess worker: the compressed DP gradient wire on host devices.
+"""Subprocess worker: the compressed DP gradient wires on host devices.
 
-BOTH shard_map wires — the i32-lane psum form
-(`core.collectives.ef_psum_mean_bucket`) and the bandwidth-optimal
+ALL THREE shard_map wires — the i32-lane psum form
+(`core.collectives.ef_psum_mean_bucket`), the bandwidth-optimal
 compressed ring (`core.collectives.ring_ef_reduce_mean_bucket`: packed
 b-bit code segments on rotation ppermutes, fused local
-unpack-accumulate, packed code-sum all-gather) — must match the
-single-process simulation (`core.grad_compress.compress_allreduce`)
-BIT-FOR-BIT given the same base key: the shared scale is an
-order-independent f32 max and the code accumulation is an exact int32
-sum, so neither reduction order nor the ring's segment schedule can
-introduce drift.  Checked over multiple steps (the error state
+unpack-accumulate, packed code-sum all-gather), and the ZeRO-sharded
+reduce-scatter (`core.collectives.ring_ef_reduce_scatter_bucket`: the
+same ring stopped at the segment midpoint, each rank decoding only its
+owned segment) — must match the single-process simulation
+(`core.grad_compress.compress_allreduce` and its sharded extension
+`compress_reduce_scatter`) BIT-FOR-BIT given the same base key: the
+shared scale is an order-independent f32 max and the code accumulation
+is an exact int32 sum, so neither reduction order nor the ring's
+segment schedule can introduce drift.  The sharded wire is fed the
+same DISTINCT per-rank buckets as the others — the local-gradient
+regime — and its owned segments must equal the corresponding rows of
+the full allreduce mean.  Checked over multiple steps (the error state
 telescopes through the wire), on both codec backends, across ring
 sizes {2, 3, 5, 8} (non-power-of-two sizes exercise the ragged last
 segment) AND on compound pod x data axes (2x2 and the non-power-of-two
@@ -70,6 +76,7 @@ def run_case(shape, axes, wire_axis, bits, backend):
 
     wire_psum = make_wire(C.ef_psum_mean_bucket)
     wire_ring = make_wire(C.ring_ef_reduce_mean_bucket)
+    wire_shrd = make_wire(C.ring_ef_reduce_scatter_bucket)
 
     @jax.jit
     def sim(trees, err, key):
@@ -77,16 +84,27 @@ def run_case(shape, axes, wire_axis, bits, backend):
                                      stochastic=True, backend=backend,
                                      layout=lay)
 
+    @jax.jit
+    def sim_shrd(trees, err, key):
+        return GC.compress_reduce_scatter(trees, err, bits, key,
+                                          stochastic=True,
+                                          backend=backend, layout=lay)
+
+    seg = C.ring_segment_rows(lay.rows, w)
     err_p = jnp.zeros((w, lay.rows, lay.group_d))
     err_r = jnp.zeros((w, lay.rows, lay.group_d))
+    err_z = jnp.zeros((w, lay.rows, lay.group_d))
     err_s = jnp.zeros((w, lay.rows, lay.group_d))
+    err_zs = jnp.zeros((w, lay.rows, lay.group_d))
     for step in range(3):
         trees = _trees(step, w)
         v = jnp.stack([GC.flatten_bucket(t, lay) for t in trees])
         key = jax.random.fold_in(jax.random.PRNGKey(7), step)
         means_p, err_p = wire_psum(v, err_p, key)
         means_r, err_r = wire_ring(v, err_r, key)
+        segs_z, err_z = wire_shrd(v, err_z, key)
         mean_s, err_s = sim(trees, err_s, key)
+        segs_zs, err_zs = sim_shrd(trees, err_zs, key)
         # all DP ranks hold the same allreduced mean, on both wires
         for r in range(1, w):
             np.testing.assert_array_equal(np.asarray(means_p[0]),
@@ -111,6 +129,23 @@ def run_case(shape, axes, wire_axis, bits, backend):
         np.testing.assert_array_equal(live_w, live_s)
         np.testing.assert_array_equal(np.asarray(err_p),
                                       np.asarray(err_s))
+        # ZeRO-sharded wire: encodes identically (same error state),
+        # and each rank's owned segment is bit-equal to the same rows
+        # of the full ring/psum mean — fed DISTINCT per-rank buckets,
+        # i.e. the local-gradient regime the sharded optimizer runs in
+        np.testing.assert_array_equal(np.asarray(err_z),
+                                      np.asarray(err_r))
+        full = np.asarray(means_r[0])
+        sg = np.asarray(segs_z)
+        for r in range(w):
+            lo, hi = r * seg, min((r + 1) * seg, lay.rows)
+            np.testing.assert_array_equal(sg[r, :hi - lo], full[lo:hi])
+        # ...and bit-equal to the sharded simulator extension,
+        # INCLUDING the zero-scale-decoded pad rows of a ragged last
+        # segment
+        np.testing.assert_array_equal(sg, np.asarray(segs_zs))
+        np.testing.assert_array_equal(np.asarray(err_z),
+                                      np.asarray(err_zs))
 
 
 def main():

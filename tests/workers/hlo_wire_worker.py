@@ -1,13 +1,15 @@
 """Subprocess worker: measure the DP gradient wires' HLO collective
 bytes on a real host mesh.
 
-Compiles both shard_map collectives — the i32-lane code ``psum``
-baseline and the compressed ring — for one bucket and reports the
-collective bytes `launch/hlo_cost.py` counts in the optimized HLO,
-alongside the analytic model (`collectives.ring_wire_bytes`).  The
-assertions live in tests/test_hlo_cost.py; this worker only measures
-(a subprocess because the host device count must be set before JAX
-initializes).
+Compiles all three shard_map collectives — the i32-lane code ``psum``
+baseline, the compressed ring, and the ZeRO-sharded reduce-scatter
+(the ring stopped at the segment midpoint: no code-sum all-gather at
+all) — for one bucket and reports the collective bytes
+`launch/hlo_cost.py` counts in the optimized HLO, alongside the
+analytic models (`collectives.ring_wire_bytes`, and its
+``sharded=True`` mode).  The assertions live in tests/test_hlo_cost.py;
+this worker only measures (a subprocess because the host device count
+must be set before JAX initializes).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -51,7 +53,10 @@ def main():
         out["bits"][str(bits)] = {
             "psum": measure(C.ef_psum_mean_bucket, bits),
             "ring": measure(C.ring_ef_reduce_mean_bucket, bits),
+            "sharded": measure(C.ring_ef_reduce_scatter_bucket, bits),
             "model": C.ring_wire_bytes((ROWS, D), bits, n=N),
+            "model_sharded": C.ring_wire_bytes((ROWS, D), bits, n=N,
+                                               sharded=True),
         }
     print("HLOWIRE " + json.dumps(out))
 

@@ -26,7 +26,7 @@ from repro.training import pipeline as PL
 
 
 def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
-          lr=0.0, buffer_bits=0, dp_grad_bits=0):
+          lr=0.0, buffer_bits=0, dp_grad_bits=0, dp_wire="ring"):
     cfg = get_config(arch, smoke=True)
     if num_layers:
         cfg = cfg.with_(num_layers=num_layers)
@@ -34,14 +34,19 @@ def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
     pcfg = PL.PipelineConfig(
         microbatches=M, warmup=warmup,
         compression=CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
-        remat=True, buffer_bits=buffer_bits, dp_grad_bits=dp_grad_bits)
+        remat=True, buffer_bits=buffer_bits, dp_grad_bits=dp_grad_bits,
+        dp_wire=dp_wire)
     step, meta = PL.make_train_step(
         cfg, pcfg, mesh, AdamWConfig(lr=lr, warmup_steps=1,
                                      schedule="constant"),
         global_batch=Bg, seq_len=S, buffer_samples=Bg // 2)
     params = PL.to_pipeline_params(
         cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), 2)
-    state = {"params": params, "opt": adamw.init_opt_state(params)}
+    if dp_grad_bits and dp_wire == "ring-sharded":
+        opt_state = PL.init_sharded_opt(pcfg, params, 2)
+    else:
+        opt_state = adamw.init_opt_state(params)
+    state = {"params": params, "opt": opt_state}
     if dp_grad_bits:
         state["dp_error"] = PL.init_dp_error(pcfg, params, 2)
     if mode == "aqsgd":
@@ -178,6 +183,47 @@ def check_dp_grad_pipeline():
     assert np.all(np.isfinite(losses)), losses
     assert losses[-1] < losses[0], losses
     print("OK dp_grad_pipeline", losses)
+
+
+def check_dp_wire_parity():
+    """All three DP gradient wires through the REAL pipeline train
+    step, from the same initial state and batch stream:
+
+    * ``psum`` vs ``ring`` — bit-identical losses at every step (the
+      programs differ only inside the collective; int32 code sums are
+      exact in any order);
+    * ``ring`` vs ``ring-sharded`` — bit-identical losses while the
+      trajectories coincide (first steps), then tracking at ulp level:
+      the sharded program replaces the pjit-level per-leaf AdamW with
+      the fused in-shard_map segment update, and XLA fuses the
+      surrounding model backward differently — the same documented
+      drift class as swapping codec backends (see core/boundary.py),
+      NOT codec divergence.  The collective itself is pinned bit-exact
+      against ring/psum/sim in dp_grad_worker.py.
+
+    This check also regresses the GSPMD flatten-bucket doubling bug
+    (`pipeline.replicate_leaves`): without the replication pin, every
+    wire ships a 2x gradient bucket on meshes with model > 1 and the
+    sharded trajectory separates immediately and grossly."""
+    runs = {}
+    for wire in ("psum", "ring", "ring-sharded"):
+        cfg, step, state, batch = build(
+            "gpt2-xl-paper", "aqsgd", num_layers=4, warmup=False,
+            lr=1e-3, dp_grad_bits=4, dp_wire=wire)
+        key = jax.random.PRNGKey(3)
+        losses = []
+        for i in range(4):
+            state, met = step(state, batch, jax.random.fold_in(key, i))
+            losses.append(float(met["loss"]))
+        runs[wire] = losses
+    assert runs["psum"] == runs["ring"], (runs["psum"], runs["ring"])
+    # sharded: exact while trajectories coincide, tight thereafter
+    assert runs["ring-sharded"][:2] == runs["ring"][:2], \
+        (runs["ring-sharded"], runs["ring"])
+    np.testing.assert_allclose(runs["ring-sharded"], runs["ring"],
+                               rtol=2e-3)
+    assert all(np.isfinite(v) for v in runs["ring-sharded"])
+    print("OK dp_wire_parity", runs["ring"], runs["ring-sharded"])
 
 
 def check_expert_parallel():

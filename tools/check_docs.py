@@ -1,0 +1,88 @@
+"""Docs gate: markdown link integrity + docstring coverage.
+
+Run as ``python tools/check_docs.py`` from the repo root (CI runs it in
+the lint job; tests/test_docs.py keeps it green in-container).
+
+Checks
+------
+1. Every RELATIVE markdown link in README.md, ROADMAP.md and docs/*.md
+   resolves to an existing file (anchors and external URLs are not
+   followed; badge/action links like ``../../actions/...`` that point
+   outside the repo are skipped).
+2. Every PUBLIC module-level function and class in ``src/repro/core``
+   and ``src/repro/kernels`` carries a docstring, and so does every
+   module itself.  "Public" = name not starting with ``_``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+MD_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
+            *sorted((ROOT / "docs").glob("*.md"))]
+PY_DIRS = [ROOT / "src" / "repro" / "core",
+           ROOT / "src" / "repro" / "kernels"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links() -> list[str]:
+    """Relative markdown links must resolve from their file's dir."""
+    errors = []
+    for md in MD_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(ROOT)}: file missing")
+            continue
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "#",
+                                  "mailto:")):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            try:
+                resolved.relative_to(ROOT)
+            except ValueError:
+                continue          # points outside the repo (badges)
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_docstrings() -> list[str]:
+    """Public functions/classes/modules in core/ and kernels/ must
+    have docstrings."""
+    errors = []
+    for d in PY_DIRS:
+        for py in sorted(d.glob("*.py")):
+            tree = ast.parse(py.read_text())
+            rel = py.relative_to(ROOT)
+            if not ast.get_docstring(tree):
+                errors.append(f"{rel}: missing module docstring")
+            for node in tree.body:
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef,
+                                         ast.ClassDef)):
+                    continue
+                if node.name.startswith("_"):
+                    continue
+                if not ast.get_docstring(node):
+                    errors.append(f"{rel}:{node.lineno}: public "
+                                  f"`{node.name}` has no docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"DOCS-GATE {e}")
+    print(f"docs gate: {len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
