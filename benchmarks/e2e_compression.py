@@ -10,18 +10,20 @@ activation-only compression (paper: up to 8.5x at 100 Mbps).
 The gradient wire measured here is the real fused path: the simulated
 trainer routes ``dp_grad_bits`` through the bucketed error-feedback
 codec of `core.grad_compress` (shared-scale fused codes-only quantize,
-int32 code accumulation, fused dequant-mean) — bit-identical to ALL
-THREE shard_map wires (`core.collectives.ef_psum_mean_bucket`, the
-bandwidth-optimal `ring_ef_reduce_mean_bucket`, and the ZeRO-sharded
-`ring_ef_reduce_scatter_bucket`), so these convergence curves ARE the
-distributed system's curves for any ``--dp-wire``.  Wire bytes in the
-throughput model are reported per wire: ``psum`` is the i32-lane
-collective at the same ring-allreduce physical convention as the fp32
-row, ``ring`` is the exact packed-payload accounting of
-`collectives.ring_wire_bytes`, and ``ring-sharded`` its
-``sharded=True`` mode (reduce-scatter half only — the formulas
-tests/test_hlo_cost.py pins against the traced HLO).  All rows count
-gradient traffic only; parameter gathers (ZeRO-3) are common.
+int32 code accumulation, fused dequant-mean) — bit-identical to the
+codec shard_map wires (psum / ring / ring-sharded), so these
+convergence curves ARE the distributed system's curves for any codec
+``--dp-wire``.  Per-wire byte accounting comes from the wire
+registry's uniform `WireSpec.wire_bytes` (`repro.comm.wires` — the
+same models tests/test_hlo_cost.py pins against the traced HLO, for
+EVERY registered DP wire including the fp16 passthrough), and the
+``e2e_wire_bytes.csv`` artifact reports every plane — forward
+activations, backward gradients, z-buffers, and each DP wire — from
+that one accounting code, with a ``plane`` column.  Allreduce-class
+rows (fp32 and the psum-lowered wires: i32-lane psum, fp16) carry the
+2x physical ring convention on top of their lane bytes; the ring
+wires' models already count their hops.  All rows count gradient traffic only; parameter
+gathers (ZeRO-3) are common.
 
 ``--tiny --json out.json`` is the CI smoke configuration: fewer steps,
 machine-readable output uploaded as a nightly artifact alongside the
@@ -33,10 +35,10 @@ import argparse
 import json
 
 from benchmarks.common import finetune, tail_loss, write_csv
-from benchmarks.throughput_model import (BANDWIDTHS, CFG, MACRO,
-                                         throughput_seqs_per_s, _N)
+from benchmarks.throughput_model import (BANDWIDTHS, CFG, MACRO, MICRO,
+                                         SEQ, throughput_seqs_per_s, _N)
+from repro.comm import wires as W
 from repro.core.aqsgd import CompressionConfig
-from repro.core import collectives as C
 from repro.core import grad_compress as GC
 from repro.models import model as Mo
 
@@ -68,15 +70,15 @@ def main(steps: int = 50, tiny: bool = False,
     write_csv("e2e_compression.csv", "method,final_loss", rows)
 
     # throughput: add the DP gradient allreduce wire to the model.
-    # All rows use the same PHYSICAL per-worker convention: an i32/f32
-    # allreduce rides a ring shipping ~2x its operand bytes (the fp32
-    # row and the i32-lane "psum" wire both get that factor), while the
-    # compressed ring's model (`collectives.ring_wire_bytes`: b-bit
-    # code segments + packed code sums + f32 scale pmax, pinned to the
-    # traced HLO by test_hlo_cost) already counts its 2(N-1) hops.
+    # Per-wire bytes come from the registry's uniform `wire_bytes`
+    # accounting (the SAME models the HLO regression pins exactly);
+    # allreduce-class lanes (fp32, i32 psum) additionally carry the 2x
+    # physical ring convention — the ring wires' models already count
+    # their per-hop traffic.
     params_shape = jax.eval_shape(
         lambda: Mo.init_params(CFG, jax.random.PRNGKey(0)))
     dp_workers = 2
+    dp_bits = 4
     lay = GC.bucket_layout(params_shape)
     bucket = (lay.rows, lay.group_d)
     grad_fp32 = _N * 4 * 2
@@ -84,17 +86,45 @@ def main(steps: int = 50, tiny: bool = False,
     # traffic (the ZeRO-3 per-layer weight gathers are common to all
     # wires; ring-sharded's updated-parameter all-gather replaces the
     # gradient all-gather and is the same ZeRO-3 class of traffic)
-    grad_wire = {
-        "psum": (lay.rows * lay.group_d * 4 + lay.rows * 4) * 2,
-        "ring": C.ring_wire_bytes(bucket, 4, n=dp_workers),
-        "ring-sharded": C.ring_wire_bytes(bucket, 4, n=dp_workers,
-                                          sharded=True),
-    }
+    dp_wires = W.wire_names("dp-grad")
+    # psum-lowered wires (WireSpec.psum_lowered): their registry model
+    # counts the logical collective lanes (what the HLO pin measures),
+    # so the 2x physical ring-allreduce convention applies on top —
+    # exactly like the fp32 row.  The ring wires' models already count
+    # their hops.  Keyed on registry metadata, so a newly registered
+    # wire lands in the right class with no edit here.
+    grad_wire = {}
+    for name in dp_wires:
+        spec = W.get_wire(name)
+        b = spec.wire_bytes(bucket, dp_bits, dp_workers)
+        grad_wire[name] = b * 2 if spec.psum_lowered else b
     results["grad_wire_bytes"] = {
         "fp32": grad_fp32,
-        "q4_psum": grad_wire["psum"],
-        "q4_ring": grad_wire["ring"],
-        "q4_ring_sharded": grad_wire["ring-sharded"]}
+        **{f"q{dp_bits}_{n.replace('-', '_')}": grad_wire[n]
+           for n in dp_wires}}
+
+    # every plane's bytes from the ONE accounting code (plane column):
+    # activation planes per boundary per microbatch at the
+    # throughput-model shape, DP wires per step for the whole bucket
+    act_shape = (MICRO * SEQ, CFG.d_model)
+    fw_spec = W.get_wire("ppermute", plane="fw-activation")
+    bw_spec = W.get_wire("ppermute", plane="bw-gradient")
+    zb_spec = W.get_wire("hbm", plane="z-buffer")
+    prows = [
+        ("fw-activation", "ppermute", 3,
+         fw_spec.wire_bytes(act_shape, 3, 1)),
+        ("bw-gradient", "ppermute", 6,
+         bw_spec.wire_bytes(act_shape, 6, 1)),
+        ("z-buffer", "hbm", 4, zb_spec.wire_bytes(act_shape, 4, 1)),
+    ] + [("dp-grad", n, dp_bits,
+          W.get_wire(n).wire_bytes(bucket, dp_bits, dp_workers))
+         for n in dp_wires]
+    write_csv("e2e_wire_bytes.csv", "plane,wire,bits,bytes",
+              [(p, w, str(b), str(by)) for p, w, b, by in prows])
+    results["wire_bytes_by_plane"] = [
+        {"plane": p, "wire": w, "bits": b, "bytes": by}
+        for p, w, b, by in prows]
+
     trows = []
     for bname, bw in BANDWIDTHS.items():
         def step_time(cc, gbytes):
@@ -106,11 +136,11 @@ def main(steps: int = 50, tiny: bool = False,
                                             bw_bits=6), grad_fp32)
         results["throughput"][bname] = {
             "fp32": MACRO / t_fp, "act_only": MACRO / t_act}
-        for wire in ("psum", "ring", "ring-sharded"):
+        for wire in dp_wires:
             t_all = step_time(CompressionConfig(mode="aqsgd", fw_bits=3,
                                                 bw_bits=6),
                               grad_wire[wire])
-            trows.append((bname, wire, f"{MACRO/t_fp:.2f}",
+            trows.append((bname, "dp-grad", wire, f"{MACRO/t_fp:.2f}",
                           f"{MACRO/t_act:.2f}", f"{MACRO/t_all:.2f}",
                           f"{t_fp/t_all:.2f}x"))
             results["throughput"][bname][f"act_plus_grad_{wire}"] = \
@@ -121,7 +151,8 @@ def main(steps: int = 50, tiny: bool = False,
                   f"act+grad={MACRO/t_all:.2f},"
                   f"speedup={t_fp/t_all:.2f}x")
     write_csv("e2e_throughput.csv",
-              "bandwidth,wire,fp32,act_only,act_plus_grad,speedup", trows)
+              "bandwidth,plane,wire,fp32,act_only,act_plus_grad,speedup",
+              trows)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)

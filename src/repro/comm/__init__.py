@@ -1,0 +1,28 @@
+"""`repro.comm` — the single API for every inter-machine byte.
+
+Three pieces (see each submodule's docstring):
+
+* `repro.comm.codec`  — `Codec`: one plane's quantize/pack codec
+  bound to its (bits, stochastic, backend) knobs;
+* `repro.comm.wires`  — the named `WireSpec` registry
+  (`register_wire` / `get_wire` / `list_wires`) with the uniform
+  ``wire_bytes()`` accounting every byte report sources;
+* `repro.comm.config` — `CommConfig`: per-plane sub-configs for the
+  fw-activation / bw-gradient / z-buffer / dp-grad planes, with JSON
+  and flat-CLI serialization.
+
+`training/pipeline.py`, `training/simulated.py` and `launch/train.py`
+consume this package; new wires land as registry entries, not trainer
+surgery (the ``fp16`` DP passthrough is the in-tree example).
+"""
+from repro.comm.codec import Codec
+from repro.comm.config import (CommConfig, PlaneConfig, add_cli_args,
+                               from_args)
+from repro.comm.wires import (PLANES, WireSpec, get_wire, list_wires,
+                              register_wire, wire_names)
+
+__all__ = [
+    "Codec", "CommConfig", "PlaneConfig", "PLANES", "WireSpec",
+    "add_cli_args", "from_args", "get_wire", "list_wires",
+    "register_wire", "wire_names",
+]

@@ -1,0 +1,69 @@
+"""`Codec`: one plane's quantize/pack codec, bound to its knobs.
+
+A :class:`Codec` is the (bits, stochastic, backend) triple of one
+communication plane bound to the backend-selectable shared-scale
+boundary ops of `repro.core.boundary` — encode/decode, the AQ-SGD
+delta pair, the fake-quant roundtrip, and the error-feedback state
+init of `repro.core.grad_compress`.  It adds nothing to the math: the
+fused kernels and their bit-parity contract live below in
+`core.boundary`; the codec only stops callers from re-threading
+``bits=... stochastic=... backend=...`` through every call site.
+`comm.config.PlaneConfig.codec()` is the usual constructor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core import boundary as B
+from repro.core import grad_compress as GC
+from repro.core import quantization as Q
+
+
+@dataclass(frozen=True)
+class Codec:
+    """One plane's codec: knobs bound once, ops delegated to
+    `core.boundary` (both backends bit-identical per op)."""
+    bits: int
+    stochastic: bool = True
+    backend: str = "auto"
+
+    def encode(self, x, *, key=None):
+        """Quantize-and-pack: (packed u8 codes, f32 row scales)."""
+        return B.encode(x, bits=self.bits, stochastic=self.stochastic,
+                        key=key, backend=self.backend)
+
+    def decode(self, packed, scale, *, d: int, dtype=jnp.float32):
+        """Inverse of `encode`: payload + scales -> (..., d) values."""
+        return B.decode(packed, scale, bits=self.bits, d=d, dtype=dtype,
+                        backend=self.backend)
+
+    def encode_delta(self, a, m, *, key=None):
+        """AQ-SGD sender: (payload, scale, updated message buffer)."""
+        return B.encode_delta(a, m, bits=self.bits,
+                              stochastic=self.stochastic, key=key,
+                              backend=self.backend)
+
+    def decode_accumulate(self, packed, scale, m):
+        """AQ-SGD receiver: buffer += dequant(unpack(payload))."""
+        return B.decode_accumulate(packed, scale, m, bits=self.bits,
+                                   backend=self.backend)
+
+    def roundtrip(self, x, *, key=None):
+        """encode -> decode in x.dtype (wire-faithful fake quant)."""
+        return B.roundtrip(x, bits=self.bits, stochastic=self.stochastic,
+                           key=key, backend=self.backend)
+
+    def init_state(self, params, group_d: int = GC.DEFAULT_GROUP_D):
+        """Error-feedback carry for one rank: the zeros
+        (rows, group_d) bucket of `grad_compress.init_error_state`."""
+        return GC.init_error_state(params, group_d)
+
+    def wire_bytes(self, shape) -> int:
+        """Payload bytes for one ``shape`` crossing: packed codes +
+        f32 row scales (`Q.wire_bytes`)."""
+        if not self.bits:
+            import numpy as np
+            return int(np.prod(shape)) * 4
+        return Q.wire_bytes(shape, self.bits)

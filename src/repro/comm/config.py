@@ -1,0 +1,377 @@
+"""`CommConfig`: one structured config for every inter-machine byte.
+
+The paper's end-to-end story ("all communications between machines —
+model gradients, forward activations, and backward gradients — are
+compressed") is four planes; this module is their ONE configuration
+surface:
+
+* ``fw``   — forward activations on the pipeline axis (AQ-SGD deltas
+  or DirectQ codes on the ``ppermute`` wire);
+* ``bw``   — backward activation gradients (DirectQ, reverse perm);
+* ``zbuf`` — the z-bit stored message buffers (paper §H.5 — HBM
+  residency, not network bytes);
+* ``dp``   — model gradients on the data-parallel axes, carried by a
+  named wire from the registry (`comm.wires`): ``ring`` / ``psum`` /
+  ``ring-sharded`` / ``fp16`` / whatever a later PR registers.
+
+Each plane is a :class:`PlaneConfig` (bits, stochastic, backend,
+error-feedback, wire name, scale-group width); the whole thing
+serializes to/from JSON (``to_json``/``from_json`` — the
+``--comm-config`` CLI input) and to/from flat CLI flags
+(``add_cli_args``/``from_args``/``to_flags`` — the legacy
+``--fw-bits ... --dp-wire ...`` surface), with round-trip equality
+gated by tests/test_comm.py.  Wire names are validated against the
+registry at construction, with a did-you-mean message.
+
+`training/pipeline.py::PipelineConfig`, `training/simulated.py::
+SimTrainConfig` and `launch/train.py` all consume this; their old
+scattered kwargs (``fw_bits``/``buffer_bits``/``dp_grad_bits``/
+``dp_wire``/...) remain as thin deprecation shims that normalize into
+a `CommConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.comm import wires as W
+from repro.comm.codec import Codec
+from repro.core import grad_compress as GC
+from repro.core.aqsgd import CompressionConfig
+
+MODES = ("fp32", "directq", "aqsgd")
+PLANE_FIELDS = ("fw", "bw", "zbuf", "dp")
+# plane field name -> registry plane the wire name resolves against
+PLANE_OF = {"fw": "fw-activation", "bw": "bw-gradient",
+            "zbuf": "z-buffer", "dp": "dp-grad"}
+_DEFAULT_WIRE = {"fw": "ppermute", "bw": "ppermute", "zbuf": "hbm",
+                 "dp": "ring"}
+
+
+@dataclass(frozen=True)
+class PlaneConfig:
+    """Knobs of one communication plane.
+
+    ``bits=0`` means uncompressed/off (raw dtype for the planes that
+    have one; the DP plane is simply disabled).  ``wire`` is a name
+    from the registry for the plane (empty = the plane's default).
+    ``error_feedback`` is a DP-plane knob (``False`` drops the
+    carried-error state: plain one-shot quantization); `CommConfig`
+    normalizes it off on the other planes.  ``group_d`` is the DP
+    bucket's scale-group width (0 = default)."""
+    bits: int = 0
+    stochastic: bool = True
+    backend: str = "auto"
+    error_feedback: bool = True
+    wire: str = ""
+    group_d: int = 0
+
+    def codec(self) -> Codec:
+        """The plane's `Codec` (bits/stochastic/backend bound once)."""
+        return Codec(bits=self.bits, stochastic=self.stochastic,
+                     backend=self.backend)
+
+    def with_(self, **kw) -> "PlaneConfig":
+        """`dataclasses.replace` shorthand."""
+        return dataclasses.replace(self, **kw)
+
+
+def _plane(**kw):
+    return lambda: PlaneConfig(**kw)
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """The four communication planes plus the activation algorithm.
+
+    ``mode`` is the activation-boundary algorithm (``aqsgd`` /
+    ``directq`` / ``fp32``) — it governs the fw plane and whether
+    message buffers (and hence the zbuf plane) exist at all.
+    ``buffer_dtype`` is the raw-storage dtype when ``zbuf.bits == 0``.
+    Construction validates modes, wire names (did-you-mean on typos),
+    and fills empty wire names with each plane's default."""
+    mode: str = "aqsgd"
+    fw: PlaneConfig = field(default_factory=_plane(bits=4))
+    bw: PlaneConfig = field(default_factory=_plane(bits=8))
+    zbuf: PlaneConfig = field(default_factory=_plane(stochastic=False))
+    dp: PlaneConfig = field(default_factory=_plane())
+    buffer_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             f"one of {MODES}")
+        if self.mode != "fp32" and not self.fw.bits:
+            raise ValueError(
+                "fw.bits=0 (uncompressed forward) requires "
+                "mode='fp32' — a compressed mode would silently fall "
+                "back to a default width otherwise")
+        for fname in PLANE_FIELDS:
+            pc = getattr(self, fname)
+            if not isinstance(pc, PlaneConfig):
+                # dict (JSON) / legacy tuple tolerance: build a plane
+                pc = PlaneConfig(**pc) if isinstance(pc, dict) else pc
+            if not pc.wire:
+                pc = pc.with_(wire=_DEFAULT_WIRE[fname])
+            if fname == "dp" and not pc.group_d:
+                pc = pc.with_(group_d=GC.DEFAULT_GROUP_D)
+            W.get_wire(pc.wire, plane=PLANE_OF[fname])  # did-you-mean
+            if fname != "dp" and pc.error_feedback:
+                pc = pc.with_(error_feedback=False)
+            if fname == "zbuf" and pc.stochastic:
+                # buffer writes are deterministic by design: both
+                # boundary replicas must store identical codes
+                pc = pc.with_(stochastic=False)
+            object.__setattr__(self, fname, pc)
+
+    # -- derived views ----------------------------------------------------
+
+    @property
+    def activation(self) -> CompressionConfig:
+        """The activation-plane view as the legacy `CompressionConfig`
+        (what `core.aqsgd.apply_boundary` and the transfer builders
+        consume).  The activation codec backend is the fw plane's.
+        (fw.bits=0 only exists under mode='fp32' — validated at init —
+        where the width is unused; the `or 4` keeps the legacy
+        default there.)"""
+        return CompressionConfig(
+            mode=self.mode, fw_bits=self.fw.bits or 4,
+            bw_bits=self.bw.bits or 32, buffer_bits=self.zbuf.bits,
+            buffer_dtype=self.buffer_dtype,
+            stochastic=self.fw.stochastic, backend=self.fw.backend)
+
+    @property
+    def dp_group_d(self) -> int:
+        """The DP bucket scale-group width (normalized at init)."""
+        return self.dp.group_d
+
+    @property
+    def dp_wire_spec(self) -> W.WireSpec:
+        """The registry spec of the configured DP wire."""
+        return W.get_wire(self.dp.wire, plane="dp-grad")
+
+    def with_(self, **kw) -> "CommConfig":
+        """`dataclasses.replace` shorthand."""
+        return dataclasses.replace(self, **kw)
+
+    # -- legacy bridge ----------------------------------------------------
+
+    @classmethod
+    def from_legacy(cls, cc: Optional[CompressionConfig] = None, *,
+                    buffer_bits: Optional[int] = None,
+                    dp_grad_bits: int = 0, dp_wire: str = "",
+                    dp_grad_group: int = 0) -> "CommConfig":
+        """Build from the pre-registry knob set: a `CompressionConfig`
+        plus the scattered ``PipelineConfig``/``SimTrainConfig`` DP
+        fields.  The deprecation shims in those configs route here."""
+        cc = cc if cc is not None else CompressionConfig()
+        zb = cc.buffer_bits if buffer_bits is None else buffer_bits
+        return cls(
+            mode=cc.mode,
+            fw=PlaneConfig(bits=cc.fw_bits, stochastic=cc.stochastic,
+                           backend=cc.backend),
+            bw=PlaneConfig(bits=0 if cc.bw_bits >= 32 else cc.bw_bits,
+                           stochastic=cc.stochastic, backend=cc.backend),
+            zbuf=PlaneConfig(bits=zb, stochastic=False,
+                             backend=cc.backend),
+            dp=PlaneConfig(bits=dp_grad_bits, error_feedback=True,
+                           wire=dp_wire, group_d=dp_grad_group,
+                           backend=cc.backend,
+                           stochastic=cc.stochastic),
+            buffer_dtype=cc.buffer_dtype)
+
+    # -- JSON -------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """Plain-dict form (all fields, stable keys)."""
+        return {"mode": self.mode, "buffer_dtype": self.buffer_dtype,
+                **{f: dataclasses.asdict(getattr(self, f))
+                   for f in PLANE_FIELDS}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CommConfig":
+        """Inverse of `to_dict`; unknown keys (top-level or per-plane)
+        raise, so typos cannot silently no-op."""
+        d = dict(d)
+        kw = {}
+        for top in ("mode", "buffer_dtype"):
+            if top in d:
+                kw[top] = d.pop(top)
+        pfields = {f.name for f in dataclasses.fields(PlaneConfig)}
+        for fname in PLANE_FIELDS:
+            if fname not in d:
+                continue
+            sub = dict(d.pop(fname))
+            unknown = set(sub) - pfields
+            if unknown:
+                raise ValueError(
+                    f"unknown {fname} plane key(s) {sorted(unknown)}; "
+                    f"known: {sorted(pfields)}")
+            base = {f.name: getattr(_default_plane(fname), f.name)
+                    for f in dataclasses.fields(PlaneConfig)}
+            base.update(sub)
+            kw[fname] = PlaneConfig(**base)
+        if d:
+            raise ValueError(f"unknown CommConfig key(s) {sorted(d)}; "
+                             f"known: mode, buffer_dtype, "
+                             f"{', '.join(PLANE_FIELDS)}")
+        return cls(**kw)
+
+    def to_json(self, **kw) -> str:
+        """JSON form (the ``--comm-config`` input format)."""
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CommConfig":
+        """Parse `to_json` output (or any subset of its keys)."""
+        return cls.from_dict(json.loads(s))
+
+    # -- flat CLI flags ---------------------------------------------------
+
+    def to_flags(self) -> list[str]:
+        """The flat-flag form of this config (inverse of
+        `from_args`).  Raises if the config uses per-plane settings the
+        flat surface cannot express (differing backends or stochastic
+        across planes, non-default fw/bw/zbuf wires) — use
+        ``--comm-config`` JSON for those."""
+        planes = [self.fw, self.bw, self.dp]
+        if len({p.backend for p in planes + [self.zbuf]}) > 1:
+            raise ValueError("per-plane backends differ; flat flags "
+                             "cannot express this — use --comm-config")
+        if len({p.stochastic for p in planes}) > 1:
+            raise ValueError("per-plane stochastic differs; use "
+                             "--comm-config")
+        for fname in ("fw", "bw", "zbuf"):
+            if getattr(self, fname).wire != _DEFAULT_WIRE[fname]:
+                raise ValueError(f"non-default {fname} wire; use "
+                                 "--comm-config")
+            if getattr(self, fname).group_d:
+                raise ValueError(f"{fname}.group_d is not "
+                                 "flag-expressible; use --comm-config")
+        if self.buffer_dtype != "float32":
+            raise ValueError("non-default buffer_dtype; use "
+                             "--comm-config")
+        flags = ["--mode", self.mode,
+                 "--fw-bits", str(self.fw.bits),
+                 "--bw-bits", str(self.bw.bits),
+                 "--buffer-bits", str(self.zbuf.bits),
+                 "--dp-grad-bits", str(self.dp.bits),
+                 "--dp-wire", self.dp.wire,
+                 "--dp-grad-group", str(self.dp_group_d),
+                 "--backend", self.fw.backend]
+        if not self.fw.stochastic:
+            flags.append("--no-stochastic")
+        if not self.dp.error_feedback:
+            flags.append("--no-error-feedback")
+        return flags
+
+
+def _default_plane(fname: str) -> PlaneConfig:
+    return getattr(CommConfig(), fname)
+
+
+def resolve_legacy_comm(cls_name: str, comm, legacy: dict, mirrors: dict,
+                        build) -> CommConfig:
+    """The shared deprecation-shim protocol for configs that grew a
+    ``comm`` field (`PipelineConfig`, `SimTrainConfig`).  The legacy
+    kwargs are ``InitVar``s on those configs — construction-only, so
+    ``dataclasses.replace`` never re-passes stale values and
+    ``replace(cfg, comm=new)`` just works:
+
+    * ``comm is None`` — warn if any legacy kwarg was passed, then
+      ``build()`` the CommConfig from them;
+    * ``comm`` given — any legacy value alongside it must match
+      ``mirrors`` (the legacy views of ``comm``) or this raises.
+      NOTHING is ever silently dropped: ``dataclasses.replace``
+      re-passes the mirror values of the old comm (via the reader
+      properties), so both ``replace(cfg, dp_wire=...)`` and
+      ``replace(cfg, comm=new)`` arrive here as a mismatch and get the
+      explicit error — the supported comm-swap path is
+      ``cfg.with_comm(new)``.
+
+    ``legacy`` maps field name -> passed value (None = not passed);
+    ``build`` is called only when ``comm`` is None."""
+    if comm is None:
+        if any(v is not None for v in legacy.values()):
+            import warnings
+            warnings.warn(
+                f"{cls_name}({'/'.join(k + '=' for k in legacy)}) is "
+                f"deprecated; pass comm=CommConfig(...) (repro.comm)",
+                DeprecationWarning, stacklevel=4)
+        return build()
+    for name, val in legacy.items():
+        if val is not None and val != mirrors[name]:
+            raise ValueError(
+                f"{cls_name}: legacy value {name}={val!r} conflicts "
+                f"with comm ({mirrors[name]!r}).  Set it through "
+                f"comm=CommConfig(...); to swap comm on an existing "
+                f"config use cfg.with_comm(new_comm) — "
+                f"dataclasses.replace re-passes the deprecated mirror "
+                f"kwargs and cannot tell which side you changed")
+    return comm
+
+
+def add_cli_args(ap) -> None:
+    """Install the flat comm flags plus ``--comm-config`` on an
+    argparse parser.  The ``--dp-wire`` choices AND per-wire help
+    one-liners come from the registry metadata, so the help text
+    cannot drift from the registered wires."""
+    dp_names = W.wire_names("dp-grad")
+    dp_help = "; ".join(f"{n}: {W.get_wire(n).summary}"
+                        for n in dp_names)
+    ap.add_argument("--mode", default="aqsgd", choices=list(MODES),
+                    help="activation-boundary algorithm (fw plane)")
+    ap.add_argument("--fw-bits", type=int, default=4,
+                    help="forward activation code width")
+    ap.add_argument("--bw-bits", type=int, default=8,
+                    help="backward activation-gradient code width "
+                         "(0 = uncompressed)")
+    ap.add_argument("--buffer-bits", type=int, default=0,
+                    help="z-bit stored message buffers (0 = raw dtype)")
+    ap.add_argument("--dp-grad-bits", type=int, default=0,
+                    help="b-bit error-feedback gradient compression on "
+                         "the DP axes (0 = off; Fig. 5 end-to-end mode)")
+    ap.add_argument("--dp-wire", default="ring", choices=dp_names,
+                    help="DP gradient collective — " + dp_help)
+    ap.add_argument("--dp-grad-group", type=int,
+                    default=GC.DEFAULT_GROUP_D,
+                    help="DP gradient-bucket scale-group width")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "pallas"],
+                    help="boundary codec backend for every plane")
+    ap.add_argument("--no-stochastic", action="store_true",
+                    help="deterministic rounding on every plane")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="drop the DP carried-error state (one-shot "
+                         "quantization)")
+    ap.add_argument("--comm-config", default="",
+                    help="full CommConfig as JSON — a literal string "
+                         "or a path to a .json file; overrides the "
+                         "flat comm flags above")
+
+
+def from_args(args) -> "CommConfig":
+    """Build a `CommConfig` from parsed `add_cli_args` flags.
+    ``--comm-config`` (JSON literal or file path) wins wholesale over
+    the flat flags when given."""
+    if getattr(args, "comm_config", ""):
+        src = args.comm_config
+        if os.path.exists(src):
+            with open(src) as f:
+                src = f.read()
+        return CommConfig.from_json(src)
+    stoch = not args.no_stochastic
+    common = dict(stochastic=stoch, backend=args.backend)
+    return CommConfig(
+        mode=args.mode,
+        fw=PlaneConfig(bits=args.fw_bits, **common),
+        bw=PlaneConfig(bits=args.bw_bits, **common),
+        zbuf=PlaneConfig(bits=args.buffer_bits, stochastic=False,
+                         backend=args.backend),
+        dp=PlaneConfig(bits=args.dp_grad_bits, wire=args.dp_wire,
+                       group_d=args.dp_grad_group,
+                       error_feedback=not args.no_error_feedback,
+                       **common))

@@ -1,0 +1,260 @@
+"""Named wire registry: every inter-machine byte class, one table.
+
+A *wire* is a named way of moving one plane's payload between machines
+(or, for the z-buffer plane, into HBM): the activation ``ppermute``
+boundary crossings, the three DP gradient collectives, and any wire a
+later PR registers.  Each entry is a :class:`WireSpec` carrying
+
+* ``plane`` — which communication plane it serves
+  (``fw-activation`` / ``bw-gradient`` / ``z-buffer`` / ``dp-grad``);
+* ``summary`` — the one-liner CLI help and ``--list-wires`` print
+  (the single source; `launch/train.py` generates its ``--dp-wire``
+  help from it, so the help text can no longer drift from the
+  registry);
+* ``wire_bytes(shape, bits, n)`` — the uniform byte-accounting model.
+  For DP wires it is EXACT: tests/test_hlo_cost.py pins it against the
+  collective bytes `launch/hlo_cost.py` counts in the compiled HLO,
+  for EVERY registered DP wire (registry completeness is enforced —
+  a wire cannot land without a pinned byte model);
+* for DP wires, the shard_map ``collective`` and its bit-faithful
+  simulator ``sim_allreduce`` (``sharded=True`` marks the ZeRO wire
+  whose result is one owned segment per rank).
+
+`register_wire` is how new wires land: the ROADMAP's autodiff-hoist
+wire, topk, or further passthroughs become registry entries instead of
+another `training/pipeline.py` surgery.  The ``fp16`` wire below is
+the proof: a passthrough `core/collectives.py` never special-cased,
+trained end-to-end through `launch.train --dp-wire fp16` with no
+trainer changes.
+"""
+from __future__ import annotations
+
+import difflib
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as C
+from repro.core import grad_compress as GC
+from repro.core import quantization as Q
+
+PLANES = ("fw-activation", "bw-gradient", "z-buffer", "dp-grad")
+
+
+@dataclass(frozen=True)
+class WireSpec:
+    """One registered wire: identity, help text, byte model, and (for
+    DP wires) the collective + simulator that carry it.
+
+    ``wire_bytes(shape, bits, n)`` returns the bytes this wire puts on
+    the network (or, ``network=False``, into HBM) for one payload of
+    ``shape`` at ``bits`` over an ``n``-rank group — per device per
+    crossing, matching what `launch/hlo_cost.py` measures."""
+    name: str
+    plane: str
+    summary: str
+    wire_bytes: Callable[[tuple, int, int], int]
+    collective: Optional[Callable] = None     # shard_map body (dp-grad)
+    sim_allreduce: Optional[Callable] = None  # bit-/math-faithful sim
+    sharded: bool = False                     # ZeRO: one segment/rank
+    network: bool = True                      # False: HBM plane
+    psum_lowered: bool = False                # single psum collective:
+                                              # the byte model counts
+                                              # logical lanes, so ring-
+                                              # allreduce physical-cost
+                                              # models apply a 2x on top
+                                              # (ring wires count their
+                                              # own hops instead)
+
+
+_REGISTRY: dict[tuple[str, str], WireSpec] = {}
+
+
+def register_wire(name: str, *, summary: str, wire_bytes,
+                  plane: str = "dp-grad", collective=None,
+                  sim_allreduce=None, sharded: bool = False,
+                  network: bool = True,
+                  psum_lowered: bool = False) -> WireSpec:
+    """Register a wire under ``(plane, name)``; names are unique per
+    plane.  Returns the spec (so modules can keep a handle)."""
+    assert plane in PLANES, plane
+    key = (plane, name)
+    if key in _REGISTRY:
+        raise ValueError(f"wire {name!r} already registered on plane "
+                         f"{plane!r}")
+    spec = WireSpec(name=name, plane=plane, summary=summary,
+                    wire_bytes=wire_bytes, collective=collective,
+                    sim_allreduce=sim_allreduce, sharded=sharded,
+                    network=network, psum_lowered=psum_lowered)
+    _REGISTRY[key] = spec
+    return spec
+
+
+def unknown_wire_message(name: str, plane: str) -> str:
+    """Error text for an unknown wire, with a did-you-mean hint."""
+    known = wire_names(plane)
+    msg = (f"unknown wire {name!r} on plane {plane!r}; "
+           f"registered wires: {', '.join(known)}")
+    close = difflib.get_close_matches(name, known, n=1, cutoff=0.5)
+    if close:
+        msg += f" — did you mean {close[0]!r}?"
+    return msg
+
+
+def get_wire(name: str, plane: str = "dp-grad") -> WireSpec:
+    """Look a wire up by name (plane defaults to the DP gradient plane,
+    the one with interchangeable wires).  Unknown names raise with a
+    did-you-mean message."""
+    spec = _REGISTRY.get((plane, name))
+    if spec is None:
+        raise ValueError(unknown_wire_message(name, plane))
+    return spec
+
+
+def wire_names(plane: Optional[str] = None) -> list[str]:
+    """Registered wire names, registration order (optionally filtered
+    to one plane)."""
+    return [n for (p, n) in _REGISTRY if plane is None or p == plane]
+
+
+def list_wires(plane: Optional[str] = None) -> list[WireSpec]:
+    """All registered specs, registration order."""
+    return [s for (p, _), s in _REGISTRY.items()
+            if plane is None or p == plane]
+
+
+# ---------------------------------------------------------------------------
+# byte models (shape, bits, n) -> int.  DP models are exact per device
+# per step — pinned against compiled HLO by tests/test_hlo_cost.py.
+# ---------------------------------------------------------------------------
+
+def _codec_bytes(shape, bits: int, n: int = 1) -> int:
+    """Packed b-bit codes + one f32 scale per row: the boundary payload
+    (`Q.wire_bytes`) — forward deltas, backward gradients, z-buffers."""
+    del n
+    return Q.wire_bytes(shape, bits)
+
+
+def _psum_bytes(shape, bits: int, n: int = 1) -> int:
+    """i32 code lanes in one psum + the f32 scale pmax (the
+    conservative baseline the ring wires improve on)."""
+    del bits, n
+    rows, d = shape
+    return rows * d * 4 + rows * 4
+
+
+def _ring_bytes(shape, bits: int, n: int = 2) -> int:
+    return C.ring_wire_bytes(shape, bits, n=n)
+
+
+def _ring_sharded_bytes(shape, bits: int, n: int = 2) -> int:
+    return C.ring_wire_bytes(shape, bits, n=n, sharded=True)
+
+
+def _fp16_bytes(shape, bits: int, n: int = 1) -> int:
+    """f16 lanes in one psum; no codes, no scales, no bits knob."""
+    del bits, n
+    rows, d = shape
+    return rows * d * 2
+
+
+# ---------------------------------------------------------------------------
+# the fp16 passthrough DP wire — the registry-only wire: nothing in
+# core/collectives.py special-cases it, yet it trains end-to-end
+# ---------------------------------------------------------------------------
+
+def fp16_mean_bucket(v_grad, err, axis_name, bits: int, key,
+                     *, stochastic: bool = True, backend: str = "auto"):
+    """fp16-passthrough compressed allreduce of one gradient bucket:
+    the compensated bucket ships as raw float16 lanes in a single
+    ``psum`` — half the fp32 bytes, no codes, no scales, no noise.
+
+    Same signature as the codec wires (`ef_psum_mean_bucket` etc.) so
+    the registry closes over it; ``bits``/``key``/``stochastic``/
+    ``backend`` are accepted and ignored (the cast is deterministic).
+    Error feedback carries the local cast error ``v - f32(f16(v))`` —
+    the standard EF form for a deterministic compressor.  Unlike the
+    int32 code wires, f16 summation is order-dependent, so NO bit
+    parity with the simulator is claimed (which is exactly why the
+    codec wires exist); `fp16_sim_allreduce` is math-faithful only.
+    Must run inside shard_map over ``axis_name``."""
+    del bits, key, stochastic, backend
+    n = jax.lax.psum(1, axis_name)
+    v = v_grad.astype(jnp.float32) + err
+    h = v.astype(jnp.float16)
+    new_err = v - h.astype(jnp.float32)
+    mean = jax.lax.psum(h, axis_name).astype(jnp.float32) / n
+    return mean, new_err
+
+
+def fp16_sim_allreduce(grads_list, error_state, bits: int, key,
+                       *, stochastic: bool = True, backend: str = "auto",
+                       layout=None):
+    """Single-process simulation of `fp16_mean_bucket` over n workers
+    (same signature as `grad_compress.compress_allreduce`).  Math-
+    faithful, not bit-faithful: f16 sums are order-dependent on the
+    wire (see `fp16_mean_bucket`)."""
+    del bits, key, stochastic, backend
+    n = len(grads_list)
+    lay = layout or GC.bucket_layout(grads_list[0])
+    v = jnp.stack([GC.flatten_bucket(g, lay) for g in grads_list]) \
+        + error_state
+    h = v.astype(jnp.float16)
+    new_err = v - h.astype(jnp.float32)
+    total = jnp.sum(h, axis=0, dtype=jnp.float16)
+    mean = total.astype(jnp.float32) / n
+    return GC.unflatten_bucket(mean, lay, grads_list[0]), new_err
+
+
+# ---------------------------------------------------------------------------
+# built-in registrations
+# ---------------------------------------------------------------------------
+
+register_wire(
+    "ppermute", plane="fw-activation",
+    summary="packed AQ-SGD delta / DirectQ codes + f32 row scales on "
+            "the pipeline collective-permute",
+    wire_bytes=_codec_bytes)
+register_wire(
+    "ppermute", plane="bw-gradient",
+    summary="packed DirectQ gradient codes + scales on the reverse "
+            "collective-permute (the transfer custom_vjp)",
+    wire_bytes=_codec_bytes)
+register_wire(
+    "hbm", plane="z-buffer", network=False,
+    summary="z-bit stored message buffers (paper §H.5): HBM residency, "
+            "not network bytes",
+    wire_bytes=_codec_bytes)
+
+register_wire(
+    "ring",
+    summary="packed b-bit code segments on rotation ppermute hops + "
+            "packed code sums (bandwidth-optimal; bit-identical to "
+            "psum)",
+    wire_bytes=_ring_bytes,
+    collective=C.ring_ef_reduce_mean_bucket,
+    sim_allreduce=GC.compress_allreduce)
+register_wire(
+    "psum", psum_lowered=True,
+    summary="int32 code lanes in one psum (conservative baseline; "
+            "bit-identical to ring)",
+    wire_bytes=_psum_bytes,
+    collective=C.ef_psum_mean_bucket,
+    sim_allreduce=GC.compress_allreduce)
+register_wire(
+    "ring-sharded", sharded=True,
+    summary="ZeRO wire: the ring's reduce-scatter half only, "
+            "segment-owner optimizer, f32 updated-parameter all-gather",
+    wire_bytes=_ring_sharded_bytes,
+    collective=C.ring_ef_reduce_scatter_bucket,
+    sim_allreduce=GC.compress_reduce_scatter)
+register_wire(
+    "fp16", psum_lowered=True,
+    summary="raw float16 gradient lanes in one psum (passthrough "
+            "baseline: no codes/scales/error-feedback telescoping "
+            "guarantees; bits knob ignored)",
+    wire_bytes=_fp16_bytes,
+    collective=fp16_mean_bucket,
+    sim_allreduce=fp16_sim_allreduce)

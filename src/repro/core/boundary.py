@@ -37,12 +37,12 @@ print precision — see the quickstart).
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import env
 from repro.core import quantization as Q
 from repro.kernels import ops as K
 
@@ -61,9 +61,9 @@ def resolve_backend(backend: str = "auto", bits: Optional[int] = None) \
     if bits is not None and bits not in KERNEL_BITS:
         return "reference"
     if backend == "auto":
-        env = os.environ.get("REPRO_BOUNDARY_BACKEND", "")
-        if env:
-            backend = env
+        override = env.boundary_backend_override()
+        if override:
+            backend = override
         else:
             backend = "pallas" if jax.default_backend() == "tpu" \
                 else "reference"
@@ -85,7 +85,7 @@ def oncore_prng_enabled() -> bool:
     noise tensor.  TPU-only (interpret mode cannot lower prng_seed) and
     it relaxes the ref↔pallas parity contract to a STATISTICAL one —
     gated by the 10k-trial unbiasedness test in test_grad_compress.py."""
-    return os.environ.get("REPRO_ONCORE_PRNG", "0") == "1"
+    return env.oncore_prng()
 
 
 def _stochastic_args(shape, stochastic: bool, key, backend: str,

@@ -81,6 +81,10 @@ from repro.core import grad_compress as GC
 from repro.core import quantization as Q
 from repro.core.quantization import _EPS
 
+# Legacy constant: the codec wires THIS module implements.  The
+# canonical wire list is the registry (`repro.comm.wires`), which also
+# carries wires this module never special-cases (e.g. the fp16
+# passthrough) — derive wire choices from there, not from this tuple.
 WIRES = ("psum", "ring", "ring-sharded")
 
 # the ONE segment-geometry source (defined next to the bucket layout

@@ -1,0 +1,72 @@
+"""Central accessors for every ``REPRO_*`` environment knob.
+
+This module is the ONE place the codebase reads its environment
+switches.  Nothing outside it may call ``os.environ.get("REPRO_...")``
+— `tools/check_docs.py` scans the tree for strays, and also checks
+that every knob in :data:`KNOBS` appears in the README env-var
+reference ("Which knob do I turn"), so a new knob cannot land without
+documentation.
+
+Knob table
+----------
+
+========================  =======  ========================================
+knob                      default  meaning
+========================  =======  ========================================
+REPRO_PALLAS_INTERPRET    ``1``    ``1`` runs every Pallas kernel in
+                                   interpret mode (CPU containers); ``0``
+                                   compiles via Mosaic on real TPUs.  Read
+                                   once at import of `repro.kernels.ops`.
+REPRO_BOUNDARY_BACKEND    unset    Overrides ``backend="auto"`` resolution
+                                   for every boundary op
+                                   (`core.boundary.resolve_backend`):
+                                   ``reference`` or ``pallas``.  Unset:
+                                   pallas on TPU, reference elsewhere.
+REPRO_ONCORE_PRNG         ``0``    ``1`` opts the Pallas encode kernels
+                                   into on-core PRNG stochastic rounding
+                                   (TPU-only; relaxes ref<->pallas parity
+                                   to the statistical gate).
+========================  =======  ========================================
+
+Accessors read ``os.environ`` at call time (except the interpret flag,
+which `repro.kernels.ops` snapshots once at import, before any kernel
+is built), so tests may ``monkeypatch.setenv`` freely.
+"""
+from __future__ import annotations
+
+import os
+
+# name -> (default, one-line doc).  The keys are the exported knob set
+# tools/check_docs.py cross-checks against the README reference table.
+KNOBS = {
+    "REPRO_PALLAS_INTERPRET": (
+        "1", "Pallas interpret mode (1, default) vs Mosaic compile (0)"),
+    "REPRO_BOUNDARY_BACKEND": (
+        "", "force the boundary codec backend: reference | pallas"),
+    "REPRO_ONCORE_PRNG": (
+        "0", "1 = on-core TPU PRNG stochastic rounding (statistical gate)"),
+}
+
+
+def _get(name: str) -> str:
+    return os.environ.get(name, KNOBS[name][0])
+
+
+def pallas_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode (CPU default).
+
+    `repro.kernels.ops` snapshots this ONCE at import as its
+    ``INTERPRET`` constant — the single switch point for every fused
+    op."""
+    return _get("REPRO_PALLAS_INTERPRET") != "0"
+
+
+def boundary_backend_override() -> str:
+    """The forced boundary backend ('' = no override, resolve by
+    platform).  Consulted on every ``backend="auto"`` resolution."""
+    return _get("REPRO_BOUNDARY_BACKEND")
+
+
+def oncore_prng() -> bool:
+    """Whether the on-core PRNG encode opt-in is active (TPU-only)."""
+    return _get("REPRO_ONCORE_PRNG") == "1"

@@ -2,7 +2,8 @@
 
 On this CPU container the kernels execute in interpret mode (the TPU
 mosaic pipeline is the target); set REPRO_PALLAS_INTERPRET=0 on real
-hardware — this flag is the single switch point for every fused op.
+hardware — this flag is the single switch point for every fused op
+(snapshotted once at import via `repro.env.pallas_interpret`).
 
 The wrappers flatten leading dims to the kernel's (rows, d) layout and
 zero-pad ragged row counts up to a block multiple (padding rows are
@@ -12,14 +13,14 @@ callers may pass any (..., d) batch shape.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax.numpy as jnp
 
+from repro import env
 from repro.kernels import quant_pack as _qp
 from repro.kernels import flash_attention as _fa
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+INTERPRET = env.pallas_interpret()
 
 
 @functools.lru_cache(maxsize=1)

@@ -250,3 +250,15 @@ def hlo_cost(text: str) -> Cost:
     if entry is None:
         raise ValueError("no ENTRY computation found")
     return _cost_of(entry, comps, {}, False)
+
+
+def measure_collective_bytes(fn, *arg_structs) -> float:
+    """Compile ``fn`` on ShapeDtypeStructs and count its collective
+    bytes from the optimized HLO — the measurement side of every
+    wire-byte regression (`tests/workers/hlo_wire_worker.py` runs this
+    against each registered DP wire; the analytic side is the
+    registry's `WireSpec.wire_bytes`).  jax is imported lazily so this
+    module stays importable as a pure parser."""
+    import jax
+    text = jax.jit(fn).lower(*arg_structs).compile().as_text()
+    return hlo_cost(text).coll_bytes

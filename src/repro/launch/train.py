@@ -5,12 +5,21 @@ science path); passing --distributed uses the shard_map GPipe pipeline on
 whatever devices exist (set XLA_FLAGS=--xla_force_host_platform_device_count=N
 for CPU experiments; on TPU pods it runs as-is).
 
+All communication knobs are one `repro.comm.CommConfig`: the flat flags
+below (--mode/--fw-bits/--bw-bits/--buffer-bits/--dp-grad-bits/
+--dp-wire/...) build it, or pass the whole thing as JSON with
+--comm-config (a literal string or a path).  --dp-wire choices and
+their help one-liners come from the wire registry; --list-wires prints
+the full registry table (every plane, every wire, its byte model).
+
 Examples:
   python -m repro.launch.train --arch gpt2-xl-paper --smoke \\
       --mode aqsgd --fw-bits 4 --bw-bits 8 --steps 100
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   python -m repro.launch.train --arch gemma2-9b --smoke --distributed \\
       --data-par 4 --stages 2 --steps 10
+  python -m repro.launch.train --smoke --steps 10 \\
+      --comm-config '{"mode": "aqsgd", "dp": {"bits": 4, "wire": "fp16"}}'
 """
 from __future__ import annotations
 
@@ -19,33 +28,35 @@ import argparse
 import numpy as np
 
 
+def print_wires() -> None:
+    """The --list-wires table: every registered wire, from the
+    registry metadata (the same source the --dp-wire help uses)."""
+    from repro.comm import list_wires
+    rows = [(s.plane, s.name,
+             ("sharded" if s.sharded else "") +
+             ("" if s.network else "local"),
+             s.summary) for s in list_wires()]
+    wp = max(len(r[0]) for r in rows)
+    wn = max(len(r[1]) for r in rows)
+    wf = max(len(r[2]) for r in rows)
+    print(f"{'plane':{wp}}  {'wire':{wn}}  {'':{wf}}  summary")
+    for p, n, f, s in rows:
+        print(f"{p:{wp}}  {n:{wn}}  {f:{wf}}  {s}")
+
+
 def main():
+    from repro.comm import config as comm_cli
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-xl-paper")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
-    ap.add_argument("--mode", default="aqsgd",
-                    choices=["fp32", "directq", "aqsgd"])
-    ap.add_argument("--fw-bits", type=int, default=4)
-    ap.add_argument("--bw-bits", type=int, default=8)
-    ap.add_argument("--buffer-bits", type=int, default=0)
-    ap.add_argument("--dp-grad-bits", type=int, default=0,
-                    help="b-bit error-feedback gradient compression on "
-                         "the DP axis (0 = off; Fig. 5 end-to-end mode)")
+    comm_cli.add_cli_args(ap)
+    ap.add_argument("--list-wires", action="store_true",
+                    help="print the wire registry table and exit")
     ap.add_argument("--dp-workers", type=int, default=2,
                     help="simulated DP degree for --dp-grad-bits in the "
                          "single-host trainer")
-    ap.add_argument("--dp-wire", default="ring",
-                    choices=["ring", "psum", "ring-sharded"],
-                    help="DP gradient collective (--distributed only): "
-                         "ring ships the packed b-bit codes themselves "
-                         "(bandwidth-optimal); psum is the conservative "
-                         "i32-lane collective; ring-sharded is the ZeRO "
-                         "wire (reduce-scatter half only, segment-owner "
-                         "optimizer).  All three produce bit-identical "
-                         "gradient values (ring==psum losses are "
-                         "bit-equal; ring-sharded losses track at ulp "
-                         "level — its optimizer compiles differently)")
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
@@ -61,18 +72,19 @@ def main():
                     help="optional text file to train on (byte-level)")
     args = ap.parse_args()
 
+    if args.list_wires:
+        print_wires()
+        return
+
     import jax
     import jax.numpy as jnp
     from repro.configs.base import get_config
-    from repro.core.aqsgd import CompressionConfig
     from repro.data.pipeline import Dataset, DatasetConfig
     from repro.optim.adamw import AdamWConfig
     from repro.checkpoint import checkpoint as ckpt
 
+    comm = comm_cli.from_args(args)
     cfg = get_config(args.arch, smoke=args.smoke)
-    cc = CompressionConfig(mode=args.mode, fw_bits=args.fw_bits,
-                           bw_bits=args.bw_bits,
-                           buffer_bits=args.buffer_bits)
     dc = DatasetConfig(num_samples=args.samples, seq_len=args.seq,
                        vocab_size=cfg.vocab_size,
                        kind="textfile" if args.corpus else "synthetic-lm",
@@ -83,11 +95,10 @@ def main():
 
     if not args.distributed:
         from repro.training import simulated as sim
-        tcfg = sim.SimTrainConfig(num_stages=args.stages, compression=cc,
+        tcfg = sim.SimTrainConfig(num_stages=args.stages, comm=comm,
                                   optimizer=opt,
-                                  dp_grad_bits=args.dp_grad_bits,
                                   dp_workers=args.dp_workers
-                                  if args.dp_grad_bits else 1)
+                                  if comm.dp.bits else 1)
         state, losses = sim.train(cfg, tcfg, ds, num_steps=args.steps,
                                   batch_size=args.batch, log_every=10)
         print(f"final loss {np.mean(losses[-5:]):.4f}")
@@ -104,36 +115,35 @@ def main():
 
     mesh = make_debug_mesh(args.data_par, args.stages)
     pcfg = PL.PipelineConfig(microbatches=args.microbatches,
-                             compression=cc, warmup=True,
-                             dp_grad_bits=args.dp_grad_bits,
-                             dp_wire=args.dp_wire)
+                             comm=comm, warmup=True)
     gb = args.batch
     step_w, meta = PL.make_train_step(cfg, pcfg, mesh, opt,
                                       global_batch=gb, seq_len=args.seq,
                                       buffer_samples=args.samples
                                       // args.data_par)
     pcfg2 = PL.PipelineConfig(microbatches=args.microbatches,
-                              compression=cc, warmup=False,
-                              dp_grad_bits=args.dp_grad_bits,
-                              dp_wire=args.dp_wire)
+                              comm=comm, warmup=False)
     step_c, _ = PL.make_train_step(cfg, pcfg2, mesh, opt,
                                    global_batch=gb, seq_len=args.seq,
                                    buffer_samples=args.samples
                                    // args.data_par)
     params = PL.to_pipeline_params(
         cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), args.stages)
-    if args.dp_grad_bits and args.dp_wire == "ring-sharded":
+    if comm.dp.bits and comm.dp_wire_spec.sharded:
         opt_state = PL.init_sharded_opt(pcfg, params, args.data_par)
     else:
         opt_state = adamw.init_opt_state(params)
     state = {"params": params, "opt": opt_state}
-    if args.dp_grad_bits:
+    if comm.dp.bits:
         state["dp_error"] = PL.init_dp_error(pcfg, params, args.data_par)
-    if cc.mode == "aqsgd":
+    if comm.mode == "aqsgd":
         n_loc = args.samples // args.data_par
-        bshape = (args.stages, args.data_par * n_loc, args.seq, cfg.d_model)
-        state["m_out"] = jnp.zeros(bshape, jnp.bfloat16)
-        state["m_in"] = jnp.zeros(bshape, jnp.bfloat16)
+        structs = PL.buffer_structs(pcfg, args.stages,
+                                    args.data_par * n_loc, args.seq,
+                                    cfg.d_model)
+        zeros = lambda s: jnp.zeros(s.shape, s.dtype)
+        state["m_out"] = jax.tree.map(zeros, structs)
+        state["m_in"] = jax.tree.map(zeros, structs)
 
     m = args.microbatches
     steps_per_epoch = max(args.samples // gb, 1)
@@ -141,7 +151,7 @@ def main():
     for step_i, batch in enumerate(ds.batches(gb, args.steps)):
         batch = {k: jnp.asarray(v).reshape(m, gb // m, *v.shape[1:])
                  for k, v in batch.items()}
-        fn = step_w if (cc.mode == "aqsgd"
+        fn = step_w if (comm.mode == "aqsgd"
                         and step_i < steps_per_epoch
                         * args.warmup_epochs) else step_c
         state, metrics = fn(state, batch, jax.random.fold_in(key, step_i))

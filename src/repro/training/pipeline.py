@@ -18,13 +18,19 @@ pipeline automatically; the boundary transfer is a ``custom_vjp`` so that
 i.e. the lowered ``collective-permute`` ops genuinely carry 2-8 bit
 payloads — the compression shows up in the §Roofline collective term.
 
-DP gradient wire (``dp_grad_bits > 0``, paper Fig. 5 "end-to-end
+All communication knobs live in ``PipelineConfig.comm``
+(`repro.comm.CommConfig`: fw / bw / z-buffer / dp planes; the old flat
+kwargs remain as deprecation shims), and the DP collective is resolved
+by name from the wire registry (`repro.comm.wires`), so a newly
+registered wire reaches this trainer with no changes here.
+
+DP gradient wire (``comm.dp.bits > 0``, paper Fig. 5 "end-to-end
 communication compression"): the whole gradient tree is flattened into
 one bucketed (rows, group_d) array and allreduced over the DP axes —
 pmax-shared rowwise scales, fused codes-only quantize, exact int32 code
 accumulation, fused dequant-mean — with per-rank error-feedback state
 (``dp_error`` in the train state, sharded one bucket per DP rank).
-``dp_wire`` picks the collective: the bandwidth-optimal compressed ring
+``comm.dp.wire`` picks the collective: the bandwidth-optimal compressed ring
 (packed b-bit codes on ``ppermute`` hops, local unpack-accumulate —
 the default), the conservative i32-lane code ``psum``, or the
 ZeRO-sharded ``ring-sharded`` (the ring stopped at its reduce-scatter
@@ -67,7 +73,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass
 from typing import Any, Optional
 
 import jax
@@ -75,6 +81,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm import wires as CW
+from repro.comm.config import CommConfig, resolve_legacy_comm
 from repro.configs.base import ModelConfig
 from repro.core import boundary as B
 from repro.core import collectives as C
@@ -89,30 +97,92 @@ from repro.models import ssm as S
 from repro.optim import adamw
 
 
+def _comm_mirrors(comm: CommConfig) -> dict:
+    """The deprecated flat-field views of a `CommConfig` (what the
+    legacy ``PipelineConfig(...)`` kwargs normalize into, and what the
+    mirror attributes are backfilled from so old readers keep
+    working)."""
+    return {"compression": comm.activation,
+            "buffer_bits": comm.zbuf.bits,
+            "dp_grad_bits": comm.dp.bits,
+            "dp_grad_group": comm.dp_group_d,
+            "dp_wire": comm.dp.wire}
+
+
 @dataclass(frozen=True)
 class PipelineConfig:
+    """Pipeline-trainer knobs.  All communication lives in ``comm``
+    (`repro.comm.CommConfig`: fw / bw / z-buffer / dp planes, wire
+    names from the registry); the trailing init-only parameters are
+    DEPRECATED construction shims — old kwargs (``compression=...``,
+    ``buffer_bits=...``, ``dp_grad_bits=...``, ``dp_grad_group=...``,
+    ``dp_wire=...``) still work for one release and normalize into
+    ``comm``.  The same names remain readable as PROPERTIES derived
+    from ``comm`` (so old reader code keeps working).  Mixing an
+    explicit ``comm`` with a conflicting legacy value raises — and
+    because ``dataclasses.replace`` re-passes the mirror values, that
+    includes ``replace(cfg, dp_wire=...)`` AND ``replace(cfg,
+    comm=new)``; swap comm on an existing config with
+    ``cfg.with_comm(new)`` (plain ``replace`` on the non-deprecated
+    fields works as usual)."""
     microbatches: int = 16
-    compression: CompressionConfig = field(default_factory=CompressionConfig)
+    comm: Optional[CommConfig] = None
     warmup: bool = False            # warm-up epoch: uncompressed, fills m
     remat: bool = True
     block_k: int = 512
     buffer_dtype: str = "bfloat16"  # HBM-resident message buffer precision
-    buffer_bits: int = 0            # 0 = raw dtype; 2/4/8 = z-bit stored
-                                    # messages (paper §H.5) + f32 scales
     loss_chunks: int = 64           # sequential CE chunks (bounds logits mem)
-    dp_grad_bits: int = 0           # Fig. 5: b-bit error-feedback gradient
-                                    # compression on the DP axis (0 = off)
-    dp_grad_group: int = GC.DEFAULT_GROUP_D  # gradient-bucket group width
-    dp_wire: str = "ring"           # ring: packed b-bit codes on the wire
-                                    # (bandwidth-optimal); psum: i32-lane
-                                    # collective (conservative baseline);
-                                    # ring-sharded: ZeRO — reduce-scatter
-                                    # half only, segment-owner optimizer.
-                                    # Bit-identical gradient values on
-                                    # all three.
     moe_mode: str = "zero3"         # zero3 | expert_parallel (§Perf)
     remat_mode: str = "nested"      # nested | layer (§Perf: nested saves
                                     # HBM, layer saves one fwd recompute)
+    # ---- DEPRECATED init-only shims (use comm=CommConfig(...)) ----------
+    compression: InitVar[Optional[CompressionConfig]] = None
+    buffer_bits: InitVar[Optional[int]] = None       # -> comm.zbuf.bits
+    dp_grad_bits: InitVar[Optional[int]] = None      # -> comm.dp.bits
+    dp_grad_group: InitVar[Optional[int]] = None     # -> comm.dp.group_d
+    dp_wire: InitVar[Optional[str]] = None           # -> comm.dp.wire
+
+    def __post_init__(self, compression, buffer_bits, dp_grad_bits,
+                      dp_grad_group, dp_wire):
+        legacy = {"compression": compression,
+                  "buffer_bits": buffer_bits,
+                  "dp_grad_bits": dp_grad_bits,
+                  "dp_grad_group": dp_grad_group,
+                  "dp_wire": dp_wire}
+
+        def build():
+            cc = compression if compression is not None \
+                else CompressionConfig()
+            return CommConfig.from_legacy(
+                cc, buffer_bits=buffer_bits,
+                dp_grad_bits=dp_grad_bits or 0,
+                dp_wire=dp_wire or "",
+                dp_grad_group=dp_grad_group or 0)
+
+        comm = resolve_legacy_comm(
+            "PipelineConfig", self.comm, legacy,
+            _comm_mirrors(self.comm) if self.comm is not None else {},
+            build)
+        object.__setattr__(self, "comm", comm)
+
+    def with_comm(self, comm: CommConfig) -> "PipelineConfig":
+        """Copy of this config with ``comm`` swapped — the supported
+        path, since ``dataclasses.replace`` re-passes the deprecated
+        mirror kwargs of the OLD comm and would raise a conflict."""
+        kw = {f.name: getattr(self, f.name)
+              for f in dataclasses.fields(self)}   # excludes InitVars
+        kw["comm"] = comm
+        return type(self)(**kw)
+
+
+# the deprecated names stay READABLE as comm-derived properties (the
+# InitVar class attributes are replaced after class creation, so the
+# constructor kwargs and the reader properties share one name)
+for _name in ("compression", "buffer_bits", "dp_grad_bits",
+              "dp_grad_group", "dp_wire"):
+    setattr(PipelineConfig, _name,
+            property(lambda self, _n=_name: _comm_mirrors(self.comm)[_n]))
+del _name
 
 
 # ---------------------------------------------------------------------------
@@ -392,50 +462,52 @@ def replicate_leaves(mesh, tree):
     return jax.tree.map(rep, tree)
 
 
-def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
+def make_dp_grad_wire(mesh, comm: CommConfig):
     """shard_map'd compressed gradient allreduce over the DP axes.
 
     The gradient tree is flattened into one (rows, group_d) bucket
     (`core.grad_compress.bucket_layout`) which every device holds in
-    full; the wire pmax-shares the rowwise scale, quantizes through the
-    fused boundary codec, and accumulates int32 codes over the DP axes.
-    ``pcfg.dp_wire`` selects the collective:
+    full.  ``comm.dp.wire`` names the collective in the wire registry
+    (`repro.comm.wires` — ``--list-wires`` prints the table); any
+    registered full-mean DP wire flows through here with NO trainer
+    changes — that is the point of the registry (the ``fp16``
+    passthrough is the in-tree example).  The built-in codec wires
+    (``ring``/``psum``) pmax-share the rowwise scale, quantize through
+    the fused boundary codec, and accumulate int32 codes, so they
+    produce BIT-IDENTICAL results and the switch is purely a wire-cost
+    choice (see each `core.collectives` docstring).
 
-    * ``"ring"`` (default) — `core.collectives.ring_ef_reduce_mean_bucket`:
-      the packed b-bit codes themselves ship on rotation-scheduled
-      ``ppermute`` hops (reduce-scatter of code segments with fused
-      local unpack-accumulate, then an all-gather of packed code sums);
-    * ``"psum"`` — `core.collectives.ef_psum_mean_bucket`: the i32-lane
-      code ``psum`` (conservative wire bound, kept as the baseline the
-      HLO-cost regression test measures the ring against).
-
-    Both produce BIT-IDENTICAL results (int32 code sums are exact in
-    any order), so the switch is purely a wire-cost choice.
     Error-feedback state is per DP rank: a (D, rows, group_d) array
     sharded over the data axes so each device carries exactly its own
-    feedback bucket.
+    feedback bucket (``comm.dp.error_feedback=False`` zeroes the carry
+    — plain one-shot quantization; the state slot stays for layout
+    stability).
 
     Noise keys fold in the device's DP position, so ranks draw
     independent rounding noise and the allreduce is a genuine n-worker
-    compressed mean — bit-identical to
-    `grad_compress.compress_allreduce` with the same base key and the
-    same per-rank inputs.  (In `make_train_step` the input bucket is the
-    pjit-level gradient, already reduced over data by autodiff — see the
-    module docstring's placement caveat.)"""
+    compressed mean — bit-identical to the wire's registered simulator
+    (`WireSpec.sim_allreduce`) with the same base key and the same
+    per-rank inputs, where the wire claims bit parity at all.  (In
+    `make_train_step` the input bucket is the pjit-level gradient,
+    already reduced over data by autodiff — see the module docstring's
+    placement caveat.)"""
     daxes = data_axes(mesh)
     axis = daxes if len(daxes) > 1 else daxes[0]
-    # ring-sharded has no standalone mean-producing wire at this level:
-    # its segment mean must stay inside the shard_map that consumes it
-    # (`make_dp_sharded_update`), so this factory only serves the
-    # full-mean wires.
-    assert pcfg.dp_wire in ("psum", "ring"), pcfg.dp_wire
-    collective = C.ring_ef_reduce_mean_bucket if pcfg.dp_wire == "ring" \
-        else C.ef_psum_mean_bucket
+    dpc = comm.dp
+    # sharded wires have no standalone mean-producing form at this
+    # level: their segment mean must stay inside the shard_map that
+    # consumes it (`make_dp_sharded_update`), so this factory only
+    # serves the full-mean wires.
+    spec = CW.get_wire(dpc.wire, plane="dp-grad")
+    assert spec.collective is not None and not spec.sharded, dpc.wire
 
     def wire(g2d, err, key):
-        mean, new_err = collective(
-            g2d, err[0], axis, pcfg.dp_grad_bits, key,
-            stochastic=cc.stochastic, backend=cc.backend)
+        e = err[0] if dpc.error_feedback else jnp.zeros_like(err[0])
+        mean, new_err = spec.collective(
+            g2d, e, axis, dpc.bits, key,
+            stochastic=dpc.stochastic, backend=dpc.backend)
+        if not dpc.error_feedback:
+            new_err = jnp.zeros_like(new_err)
         return mean, new_err[None]
 
     return shard_map(wire, mesh,
@@ -443,8 +515,7 @@ def make_dp_grad_wire(mesh, pcfg: "PipelineConfig", cc: CompressionConfig):
                      (P(None, None), P(axis, None, None)))
 
 
-def make_dp_sharded_update(mesh, pcfg: "PipelineConfig",
-                           cc: CompressionConfig,
+def make_dp_sharded_update(mesh, comm: CommConfig,
                            opt_cfg: adamw.AdamWConfig, glayout):
     """The fused ZeRO step for ``dp_wire="ring-sharded"``: compressed
     reduce-scatter + segment-owner AdamW + parameter all-gather, all
@@ -470,15 +541,22 @@ def make_dp_sharded_update(mesh, pcfg: "PipelineConfig",
     Returns update(bucket, dp_error, pbucket, mu, nu, step, key) ->
     (new full bucket (rows, group_d), new dp_error, new mu, new nu,
     new step); pbucket/mu/nu are (n_ranks, seg, group_d) stacks sharded
-    one segment per rank."""
+    one segment per rank.  The collective comes from the wire registry
+    (``comm.dp.wire`` must name a ``sharded=True`` spec)."""
     daxes = data_axes(mesh)
     axis = daxes if len(daxes) > 1 else daxes[0]
     rows = glayout.rows
+    dpc = comm.dp
+    spec = CW.get_wire(dpc.wire, plane="dp-grad")
+    assert spec.sharded and spec.collective is not None, dpc.wire
 
     def upd(g2d, err, pb, mu, nu, step, key):
-        seg_mean, new_err = C.ring_ef_reduce_scatter_bucket(
-            g2d, err[0], axis, pcfg.dp_grad_bits, key,
-            stochastic=cc.stochastic, backend=cc.backend)
+        e = err[0] if dpc.error_feedback else jnp.zeros_like(err[0])
+        seg_mean, new_err = spec.collective(
+            g2d, e, axis, dpc.bits, key,
+            stochastic=dpc.stochastic, backend=dpc.backend)
+        if not dpc.error_feedback:
+            new_err = jnp.zeros_like(new_err)
         new_pseg, new_opt = adamw.apply_bucket_updates(
             opt_cfg, pb[0], seg_mean,
             {"mu": mu[0], "nu": nu[0], "step": step})
@@ -497,7 +575,7 @@ def make_dp_sharded_update(mesh, pcfg: "PipelineConfig",
 def init_dp_error(pcfg: "PipelineConfig", params, n_ranks: int):
     """Initial per-rank error-feedback stack (n_ranks, rows, group_d) —
     the one place that ties the stack depth to the mesh's DP product and
-    the bucket width to `pcfg.dp_grad_group`, so callers cannot drift
+    the bucket width to `pcfg.comm.dp.group_d`, so callers cannot drift
     from the layout `make_train_step` traces against.
     (`make_state_structs` derives its dp_error struct by eval_shape of
     THIS function, and tests/test_grad_compress.py pins the layout on
@@ -507,7 +585,7 @@ def init_dp_error(pcfg: "PipelineConfig", params, n_ranks: int):
     ``ring-sharded``: each rank encodes its whole compensated bucket
     (it ships every segment to that segment's owner), so only the
     *reduced gradient* and the optimizer state are segment-sharded."""
-    err = GC.init_error_state(params, pcfg.dp_grad_group)
+    err = GC.init_error_state(params, pcfg.comm.dp_group_d)
     return jnp.stack([err] * n_ranks)
 
 
@@ -516,7 +594,7 @@ def dp_bucket_segment(pcfg: "PipelineConfig", params, n_ranks: int) -> int:
     source for the (n_ranks, seg, group_d) layout shared by the wire
     output, `adamw.init_bucket_opt_state`, and the pjit sharding
     specs."""
-    lay = GC.bucket_layout(params, pcfg.dp_grad_group)
+    lay = GC.bucket_layout(params, pcfg.comm.dp_group_d)
     return C.ring_segment_rows(lay.rows, n_ranks)
 
 
@@ -526,7 +604,8 @@ def init_sharded_opt(pcfg: "PipelineConfig", params, n_ranks: int) -> dict:
     rank (placed P(data-axes) by `make_train_step`'s state specs).
     Replaces `adamw.init_opt_state`'s per-leaf tree in sharded mode."""
     seg = dp_bucket_segment(pcfg, params, n_ranks)
-    return adamw.init_bucket_opt_state(n_ranks, seg, pcfg.dp_grad_group)
+    return adamw.init_bucket_opt_state(n_ranks, seg,
+                                       pcfg.comm.dp_group_d)
 
 
 # ---------------------------------------------------------------------------
@@ -539,21 +618,20 @@ def buffer_read(pcfg: PipelineConfig, buf, ids):
     Messages are never differentiated (the transfer custom_vjp discards
     their cotangents), so the codec runs under stop_gradient — which also
     keeps the fused pallas decode out of the autodiff trace."""
-    if pcfg.buffer_bits:
+    zb = pcfg.comm.zbuf
+    if zb.bits:
         codes = jax.lax.stop_gradient(buf["codes"][ids])
         scale = jax.lax.stop_gradient(buf["scale"][ids])
-        d = buf["codes"].shape[-1] * Q.codes_per_byte(pcfg.buffer_bits)
-        return B.decode(codes, scale, bits=pcfg.buffer_bits, d=d,
-                        backend=pcfg.compression.backend)
+        d = buf["codes"].shape[-1] * Q.codes_per_byte(zb.bits)
+        return zb.codec().decode(codes, scale, d=d)
     return buf[ids].astype(jnp.float32)
 
 
 def buffer_write(pcfg: PipelineConfig, buf, ids, val, keep_mask):
     """Store new messages at ids (keep old rows where ~keep_mask)."""
-    if pcfg.buffer_bits:
-        packed, scale = B.encode(jax.lax.stop_gradient(val),
-                                 bits=pcfg.buffer_bits, stochastic=False,
-                                 backend=pcfg.compression.backend)
+    zb = pcfg.comm.zbuf
+    if zb.bits:
+        packed, scale = zb.codec().encode(jax.lax.stop_gradient(val))
         old_c, old_s = buf["codes"][ids], buf["scale"][ids]
         m = keep_mask[..., None, None]
         return {
@@ -567,8 +645,9 @@ def buffer_write(pcfg: PipelineConfig, buf, ids, val, keep_mask):
 
 def buffer_structs(pcfg: PipelineConfig, k: int, n: int, seq: int, d: int):
     """ShapeDtypeStructs for one buffer array (m_out or m_in)."""
-    if pcfg.buffer_bits:
-        pw = Q.packed_width(d, pcfg.buffer_bits)
+    zbits = pcfg.comm.zbuf.bits
+    if zbits:
+        pw = Q.packed_width(d, zbits)
         return {"codes": jax.ShapeDtypeStruct((k, n, seq, pw), jnp.uint8),
                 "scale": jax.ShapeDtypeStruct((k, n, seq, 1), jnp.float32)}
     return jax.ShapeDtypeStruct((k, n, seq, d),
@@ -700,7 +779,7 @@ def make_pipeline_fn(cfg: ModelConfig, pcfg: PipelineConfig,
                      lay: StageLayout, layer_dims, shared_dims,
                      exp_axes=None, ep_size: int = 0):
     K = lay.num_stages
-    cc = pcfg.compression
+    cc = pcfg.comm.activation
     mode = "warmup" if (pcfg.warmup and cc.mode == "aqsgd") else cc.mode
     has_bufs = cc.mode == "aqsgd"
     transfer = make_transfer(mode, cc.fw_bits, cc.bw_bits, cc.stochastic, K,
@@ -796,8 +875,8 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     M = pcfg.microbatches
     assert global_batch % (D * M) == 0, (global_batch, D, M)
     lay = stage_layout(cfg, K)
-    cc = pcfg.compression
-    has_bufs = cc.mode == "aqsgd"
+    comm = pcfg.comm
+    has_bufs = comm.mode == "aqsgd"
     trunk_seq = seq_len        # total trunk sequence (patches + text)
 
     # static per-leaf FSDP dims (global shapes -> in-scan local dims)
@@ -814,15 +893,16 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     pipeline_fn = make_pipeline_fn(cfg, pcfg, lay, layer_dims, shared_dims,
                                    exp_axes, Df)
     flags = layer_flags(cfg, lay, trunk_seq)
-    dp_sharded = pcfg.dp_grad_bits and pcfg.dp_wire == "ring-sharded"
-    if pcfg.dp_grad_bits:
-        glayout = GC.bucket_layout(params_shape, pcfg.dp_grad_group)
+    dp_bits = comm.dp.bits
+    dp_sharded = bool(dp_bits) and comm.dp_wire_spec.sharded
+    if dp_bits:
+        glayout = GC.bucket_layout(params_shape, comm.dp_group_d)
         dp_seg = C.ring_segment_rows(glayout.rows, D)
         if dp_sharded:
-            dp_update = make_dp_sharded_update(mesh, pcfg, cc, opt_cfg,
+            dp_update = make_dp_sharded_update(mesh, comm, opt_cfg,
                                                glayout)
         else:
-            dp_wire = make_dp_grad_wire(mesh, pcfg, cc)
+            dp_wire = make_dp_grad_wire(mesh, comm)
 
     # ---- shard_map specs -------------------------------------------------
     def _stage_pspec(leaf):
@@ -847,7 +927,7 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
     _bp = P("model", d_ax, None, None)
     if not has_bufs:
         buf_spec = P(None)
-    elif pcfg.buffer_bits:
+    elif comm.zbuf.bits:
         buf_spec = {"codes": _bp, "scale": _bp}
     else:
         buf_spec = _bp
@@ -955,7 +1035,7 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
                                  "step": new_step},
                          "dp_error": new_dp_err}
         else:
-            if pcfg.dp_grad_bits:
+            if dp_bits:
                 bucket = GC.flatten_bucket(
                     replicate_leaves(mesh, grads), glayout)
                 mean, new_dp_err = dp_wire(bucket, state["dp_error"],
@@ -964,7 +1044,7 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
             new_params, new_opt = adamw.apply_updates(
                 opt_cfg, params, grads, state["opt"])
             new_state = {"params": new_params, "opt": new_opt}
-            if pcfg.dp_grad_bits:
+            if dp_bits:
                 new_state["dp_error"] = new_dp_err
         if has_bufs:
             new_state["m_out"] = nmo
@@ -992,11 +1072,11 @@ def make_train_step(cfg: ModelConfig, pcfg: PipelineConfig, mesh,
         opt_specs = {"mu": moment_specs, "nu": moment_specs,
                      "step": NamedSharding(mesh, P())}
     state_specs = {"params": pspecs, "opt": opt_specs}
-    if pcfg.dp_grad_bits:
+    if dp_bits:
         state_specs["dp_error"] = NamedSharding(mesh, P(d_ax, None, None))
     if has_bufs:
         bspec = NamedSharding(mesh, P("model", d_ax, None, None))
-        if pcfg.buffer_bits:
+        if comm.zbuf.bits:
             bspec = {"codes": bspec, "scale": bspec}
         state_specs["m_out"] = bspec
         state_specs["m_in"] = bspec
@@ -1035,7 +1115,8 @@ def make_state_structs(cfg: ModelConfig, pcfg: PipelineConfig, meta,
         lambda s: jax.ShapeDtypeStruct(s.shape, dt), meta["params_shape"])
     daxes = data_axes(mesh)
     D = int(np.prod([mesh.shape[a] for a in daxes]))
-    if pcfg.dp_grad_bits and pcfg.dp_wire == "ring-sharded":
+    comm = pcfg.comm
+    if comm.dp.bits and comm.dp_wire_spec.sharded:
         # segment-partitioned bucket moments (one segment per DP rank)
         opt = jax.eval_shape(lambda p: init_sharded_opt(pcfg, p, D),
                              meta["params_shape"])
@@ -1053,13 +1134,13 @@ def make_state_structs(cfg: ModelConfig, pcfg: PipelineConfig, meta,
         opt = {"mu": moments, "nu": moments,
                "step": jax.ShapeDtypeStruct((), jnp.int32)}
     state = {"params": params, "opt": opt}
-    if pcfg.dp_grad_bits:
+    if comm.dp.bits:
         # derived by eval_shape of the ONE init function so the struct
         # cannot drift from the layout `make_train_step` traces against
         # (tests/test_grad_compress.py pins this on the worker meshes)
         state["dp_error"] = jax.eval_shape(
             lambda p: init_dp_error(pcfg, p, D), meta["params_shape"])
-    if pcfg.compression.mode == "aqsgd":
+    if comm.mode == "aqsgd":
         K = mesh.shape["model"]
         daxes = data_axes(mesh)
         D = int(np.prod([mesh.shape[a] for a in daxes]))

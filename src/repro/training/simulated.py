@@ -18,7 +18,12 @@ backends are bit-identical per op (see core.boundary), so convergence
 results measured here transfer across backends up to the usual
 compiler-fusion ulp noise in the surrounding model compute.
 
-DP gradient compression (Fig. 5, ``dp_grad_bits > 0``) uses the bucketed
+All communication knobs live in ``SimTrainConfig.comm``
+(`repro.comm.CommConfig`; old flat kwargs remain as deprecation
+shims), and the DP wire is simulated by its registered
+`WireSpec.sim_allreduce` from the wire registry.
+
+DP gradient compression (Fig. 5, ``comm.dp.bits > 0``) uses the bucketed
 error-feedback codec of `core.grad_compress`: each simulated worker's
 gradient tree is flattened into one (rows, group_d) bucket, quantized
 against the cross-worker shared scale through the fused boundary codec,
@@ -42,12 +47,13 @@ divergence) — pinned by tests/test_grad_compress.py.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import InitVar, dataclass, field
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.comm.config import CommConfig, resolve_legacy_comm
 from repro.configs.base import ModelConfig
 from repro.core import aqsgd
 from repro.core import grad_compress
@@ -58,25 +64,86 @@ from repro.optim import adamw
 
 @dataclass(frozen=True)
 class SimTrainConfig:
+    """Simulated-trainer knobs.  All communication lives in ``comm``
+    (`repro.comm.CommConfig`); the DP plane's wire is simulated by its
+    registered `WireSpec.sim_allreduce` (bit-faithful to the shard_map
+    collective for the codec wires, math-faithful for passthroughs
+    like ``fp16``).  The trailing init-only parameters are DEPRECATED
+    construction shims — old kwargs (``compression=...``,
+    ``dp_grad_bits=...``, ``dp_grad_group=...``, ``dp_sharded=...``)
+    keep working for one release and normalize into ``comm``
+    (``dp_sharded=True`` maps to the ``ring-sharded`` wire).  The same
+    names remain readable as comm-derived properties; conflicting
+    comm + legacy values raise, and — since ``dataclasses.replace``
+    re-passes the mirrors — swapping comm goes through
+    ``cfg.with_comm(new)`` (see `PipelineConfig`)."""
     num_stages: int = 4
-    compression: CompressionConfig = field(default_factory=CompressionConfig)
+    comm: Optional[CommConfig] = None
     optimizer: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
-    # Fig. 5: error-feedback compression of model gradients on the DP axis
-    dp_grad_bits: int = 0           # 0 = off
-    dp_workers: int = 1             # simulated DP degree when dp_grad_bits>0
-    dp_grad_group: int = grad_compress.DEFAULT_GROUP_D  # scale-group width
-    dp_sharded: bool = False        # ZeRO: reduce-scatter wire + bucket
-                                    # AdamW on segment owners (bit-identical
-                                    # losses to the allreduce path)
+    dp_workers: int = 1             # simulated DP degree when dp bits > 0
     remat: bool = False
+    # ---- DEPRECATED init-only shims (use comm=CommConfig(...)) ----------
+    compression: InitVar[Optional[CompressionConfig]] = None
+    dp_grad_bits: InitVar[Optional[int]] = None      # -> comm.dp.bits
+    dp_grad_group: InitVar[Optional[int]] = None     # -> comm.dp.group_d
+    dp_sharded: InitVar[Optional[bool]] = None       # -> comm.dp.wire
+
+    def __post_init__(self, compression, dp_grad_bits, dp_grad_group,
+                      dp_sharded):
+        legacy = {"compression": compression,
+                  "dp_grad_bits": dp_grad_bits,
+                  "dp_grad_group": dp_grad_group,
+                  "dp_sharded": dp_sharded}
+
+        def build():
+            cc = compression if compression is not None \
+                else CompressionConfig()
+            return CommConfig.from_legacy(
+                cc, dp_grad_bits=dp_grad_bits or 0,
+                dp_wire="ring-sharded" if dp_sharded else "",
+                dp_grad_group=dp_grad_group or 0)
+
+        comm = resolve_legacy_comm(
+            "SimTrainConfig", self.comm, legacy,
+            self._mirrors(self.comm) if self.comm is not None else {},
+            build)
+        object.__setattr__(self, "comm", comm)
+
+    def with_comm(self, comm: CommConfig) -> "SimTrainConfig":
+        """Copy with ``comm`` swapped (`dataclasses.replace` re-passes
+        the deprecated mirror kwargs; this is the supported path)."""
+        import dataclasses as _dc
+        kw = {f.name: getattr(self, f.name)
+              for f in _dc.fields(self)}           # excludes InitVars
+        kw["comm"] = comm
+        return type(self)(**kw)
+
+    @staticmethod
+    def _mirrors(comm: CommConfig) -> dict:
+        return {"compression": comm.activation,
+                "dp_grad_bits": comm.dp.bits,
+                "dp_grad_group": comm.dp_group_d,
+                "dp_sharded": comm.dp_wire_spec.sharded}
+
+
+# deprecated names stay readable as comm-derived properties (the
+# InitVar class attributes are replaced post-class, so constructor
+# kwargs and reader properties share one name)
+for _name in ("compression", "dp_grad_bits", "dp_grad_group",
+              "dp_sharded"):
+    setattr(SimTrainConfig, _name,
+            property(lambda self, _n=_name:
+                     SimTrainConfig._mirrors(self.comm)[_n]))
+del _name
 
 
 def init_train_state(mcfg: ModelConfig, tcfg: SimTrainConfig,
                      num_samples: int, seq_len: int, key) -> dict:
     params = Mo.init_params(mcfg, key)
-    if tcfg.dp_grad_bits and tcfg.dp_sharded:
+    dpc = tcfg.comm.dp
+    if dpc.bits and tcfg.comm.dp_wire_spec.sharded:
         # ZeRO sim: segment-partitioned bucket moments, one per worker
-        lay = grad_compress.bucket_layout(params, tcfg.dp_grad_group)
+        lay = grad_compress.bucket_layout(params, dpc.group_d)
         seg = grad_compress.ring_segment_rows(lay.rows,
                                               tcfg.dp_workers)
         opt = adamw.init_bucket_opt_state(tcfg.dp_workers, seg,
@@ -87,17 +154,17 @@ def init_train_state(mcfg: ModelConfig, tcfg: SimTrainConfig,
         "params": params,
         "opt": opt,
         "buffers": aqsgd.init_buffers(
-            tcfg.compression, tcfg.num_stages - 1, num_samples, seq_len,
-            mcfg.d_model),
+            tcfg.comm.activation, tcfg.num_stages - 1, num_samples,
+            seq_len, mcfg.d_model),
     }
-    if tcfg.dp_grad_bits:
-        err = grad_compress.init_error_state(params, tcfg.dp_grad_group)
+    if dpc.bits:
+        err = grad_compress.init_error_state(params, dpc.group_d)
         state["dp_error"] = jnp.stack([err] * tcfg.dp_workers)
     return state
 
 
 def _loss_with_boundaries(params, mcfg, tcfg, batch, m_all, seen_all, key):
-    cc = tcfg.compression
+    cc = tcfg.comm.activation
     nb = tcfg.num_stages - 1
 
     def boundary_fn(bstate, h, idx):
@@ -117,7 +184,10 @@ def _loss_with_boundaries(params, mcfg, tcfg, batch, m_all, seen_all, key):
 def train_step(state, batch, key, *, mcfg: ModelConfig,
                tcfg: SimTrainConfig):
     """One AQ-SGD training step.  batch must include sample_ids."""
-    cc = tcfg.compression
+    cc = tcfg.comm.activation
+    dpc = tcfg.comm.dp
+    dp_spec = tcfg.comm.dp_wire_spec if dpc.bits else None
+    dp_sharded = bool(dp_spec is not None and dp_spec.sharded)
     bufs = state["buffers"]
     ids = batch["sample_ids"]
     if cc.mode == "aqsgd":
@@ -131,11 +201,13 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
         lambda p: _loss_with_boundaries(p, mcfg, tcfg, batch, m_all,
                                         seen_all, key), has_aux=True)
 
-    if tcfg.dp_grad_bits and (tcfg.dp_workers > 1 or tcfg.dp_sharded):
+    if dpc.bits and (tcfg.dp_workers > 1 or dp_sharded):
         # Fig. 5 mode: split the batch over simulated DP workers, then
-        # run the bucketed error-feedback compressed allreduce over the
-        # per-worker gradient trees — bit-faithful to the shard_map wire
-        # (core.collectives.ef_psum_mean_bucket).
+        # run the configured wire's registered simulator
+        # (`WireSpec.sim_allreduce`) over the per-worker gradient trees
+        # — bit-faithful to the shard_map collective for the codec
+        # wires (psum/ring/ring-sharded), math-faithful for
+        # passthroughs like fp16 (f16 sums are order-dependent).
         w = tcfg.dp_workers
         b = batch["tokens"].shape[0] // w
         glist, loss = [], 0.0
@@ -155,21 +227,18 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
             loss = loss + l / w
             ce = ce + met["ce"] / w
             new_ms_parts.append(met["boundary_state"])
-        glay = grad_compress.bucket_layout(glist[0], tcfg.dp_grad_group)
-        if tcfg.dp_sharded:
-            # ZeRO sim: stop at the reduce-scatter midpoint — worker i
-            # keeps only its owned segment's mean; the bucket-space
-            # optimizer below updates owned segments and reassembles.
-            seg_means, new_err = grad_compress.compress_reduce_scatter(
-                glist, state["dp_error"], tcfg.dp_grad_bits,
-                jax.random.fold_in(key, 2000), backend=cc.backend,
-                layout=glay)
-            grads = seg_means
-        else:
-            grads, new_err = grad_compress.compress_allreduce(
-                glist, state["dp_error"], tcfg.dp_grad_bits,
-                jax.random.fold_in(key, 2000), backend=cc.backend,
-                layout=glay)
+        glay = grad_compress.bucket_layout(glist[0], dpc.group_d)
+        # sharded wires stop at the reduce-scatter midpoint — worker i
+        # keeps only its owned segment's mean; the bucket-space
+        # optimizer below updates owned segments and reassembles.
+        err_in = state["dp_error"] if dpc.error_feedback \
+            else jnp.zeros_like(state["dp_error"])
+        grads, new_err = dp_spec.sim_allreduce(
+            glist, err_in, dpc.bits,
+            jax.random.fold_in(key, 2000), stochastic=dpc.stochastic,
+            backend=dpc.backend, layout=glay)
+        if not dpc.error_feedback:
+            new_err = jnp.zeros_like(new_err)
         new_state_extra = {"dp_error": new_err}
         if cc.mode == "aqsgd":
             # workers own disjoint batch shards; concat their new messages
@@ -180,26 +249,32 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
         else:
             bstate = ()
         metrics = {"ce": ce, "aux": 0.0, "boundary_state": bstate}
-    elif tcfg.dp_grad_bits:
-        # single-worker error feedback: the n=1 wire (quantize,
-        # dequantize, carry the error) through the same bucketed codec.
+    elif dpc.bits:
+        # single-worker error feedback: the n=1 wire through the same
+        # registered simulator (bit-identical to the old
+        # `compress_gradients` path for the codec wires: the n=1 code
+        # sum decodes through the identical `decode_sum_mean`).
         (loss, metrics), grads = grad_fn(state["params"])
-        grads, new_err = grad_compress.compress_gradients(
-            grads, state["dp_error"][0], tcfg.dp_grad_bits,
-            jax.random.fold_in(key, 2000), backend=cc.backend,
-            layout=grad_compress.bucket_layout(grads, tcfg.dp_grad_group))
-        new_state_extra = {"dp_error": new_err[None]}
+        err_in = state["dp_error"] if dpc.error_feedback \
+            else jnp.zeros_like(state["dp_error"])
+        grads, new_err = dp_spec.sim_allreduce(
+            [grads], err_in, dpc.bits,
+            jax.random.fold_in(key, 2000), stochastic=dpc.stochastic,
+            backend=dpc.backend,
+            layout=grad_compress.bucket_layout(grads, dpc.group_d))
+        if not dpc.error_feedback:
+            new_err = jnp.zeros_like(new_err)
+        new_state_extra = {"dp_error": new_err}
     else:
         (loss, metrics), grads = grad_fn(state["params"])
         new_state_extra = {}
 
-    if tcfg.dp_grad_bits and tcfg.dp_sharded:
+    if dpc.bits and dp_sharded:
         # segment-owner update in bucket space + parameter reassembly
         # (the sim analogue of the pipeline's parameter all-gather):
         # bit-identical losses to the allreduce + per-leaf AdamW path
         w = tcfg.dp_workers
-        lay = grad_compress.bucket_layout(state["params"],
-                                          tcfg.dp_grad_group)
+        lay = grad_compress.bucket_layout(state["params"], dpc.group_d)
         seg = grad_compress.ring_segment_rows(lay.rows, w)
         pb = grad_compress.flatten_bucket(state["params"], lay)
         pad = seg * w - lay.rows

@@ -25,10 +25,28 @@ def run_worker(script, arg, timeout=1500):
 @pytest.mark.parametrize("check", [
     "fp32_equivalence", "aqsgd_buffers", "zbit_buffers",
     "modes_all_archs", "expert_parallel", "dp_grad_pipeline",
-    "dp_wire_parity"])
+    "dp_wire_parity", "dp_wire_fp16"])
 def test_pipeline(check):
     out = run_worker("pipeline_worker.py", check)
     assert f"OK {check}" in out or "OK" in out
+
+
+def test_launch_train_fp16_wire():
+    """The registry-only fp16 DP wire trains end-to-end through the
+    real `launch.train` CLI (the acceptance path: a wire that exists
+    ONLY as a registry entry reaches the distributed trainer)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--smoke",
+         "--distributed", "--data-par", "2", "--stages", "2",
+         "--steps", "3", "--batch", "4", "--samples", "8",
+         "--seq", "32", "--microbatches", "2",
+         "--dp-grad-bits", "4", "--dp-wire", "fp16"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+    assert "final loss" in r.stdout
 
 
 def test_quantized_psum_mean():

@@ -102,6 +102,35 @@ def _wire_measurements():
     return json.loads(line[len("HLOWIRE "):])
 
 
+def test_registry_wire_bytes_models_are_exact():
+    """EVERY wire registered on the dp-grad plane must have a
+    `WireSpec.wire_bytes` model that matches the collective bytes of
+    its compiled HLO EXACTLY, at every tested width.  The worker
+    derives its wire list from the registry, and this test pins that
+    list against the registry too — so registering a new DP wire
+    auto-enrolls it here, and a wire cannot land without an exact byte
+    model (the fp16 passthrough's 2-byte lanes included)."""
+    from repro.comm import wires as W
+    out = _wire_measurements()
+    assert set(out["wires"]) == set(W.wire_names("dp-grad"))
+    for bits in (2, 4, 8):
+        row = out["bits"][str(bits)]
+        for name in out["wires"]:
+            assert row[name] == row["model_" + name], (bits, name, row)
+
+
+def test_fp16_wire_bytes_between_sharded_and_psum():
+    """The fp16 passthrough ships exactly rows*d*2 bytes — half the
+    psum baseline, independent of the bits knob — and the b-bit codec
+    wires stay below it at low widths (the whole point of the codec)."""
+    out = _wire_measurements()
+    rows, d = out["rows"], out["d"]
+    for bits in (2, 4):
+        row = out["bits"][str(bits)]
+        assert row["fp16"] == rows * d * 2, row
+        assert row["ring"] < row["fp16"] < row["psum"], (bits, row)
+
+
 def test_sharded_wire_collective_bytes_regression():
     """The ZeRO-sharded wire (`ring_ef_reduce_scatter_bucket`) stops at
     the reduce-scatter midpoint, so its HLO collective bytes must

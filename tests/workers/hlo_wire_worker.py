@@ -1,15 +1,18 @@
 """Subprocess worker: measure the DP gradient wires' HLO collective
 bytes on a real host mesh.
 
-Compiles all three shard_map collectives — the i32-lane code ``psum``
-baseline, the compressed ring, and the ZeRO-sharded reduce-scatter
-(the ring stopped at the segment midpoint: no code-sum all-gather at
-all) — for one bucket and reports the collective bytes
-`launch/hlo_cost.py` counts in the optimized HLO, alongside the
-analytic models (`collectives.ring_wire_bytes`, and its
-``sharded=True`` mode).  The assertions live in tests/test_hlo_cost.py;
-this worker only measures (a subprocess because the host device count
-must be set before JAX initializes).
+Compiles EVERY wire registered on the dp-grad plane of
+`repro.comm.wires` — the i32-lane code ``psum`` baseline, the
+compressed ring, the ZeRO-sharded reduce-scatter, the ``fp16``
+passthrough, and whatever a later PR registers — for one bucket, and
+reports the collective bytes `launch/hlo_cost.py` counts in the
+optimized HLO alongside each spec's analytic ``wire_bytes`` model.
+Because the wire list is DERIVED from the registry, registering a new
+DP wire automatically enrolls it in the byte regression; a wire
+cannot land without a pinned byte model (the completeness assertions
+live in tests/test_hlo_cost.py; this worker only measures — a
+subprocess because the host device count must be set before JAX
+initializes).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -20,44 +23,50 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives as C
-from repro.launch.hlo_cost import hlo_cost
+from repro.comm import wires as W
+from repro.launch.hlo_cost import measure_collective_bytes
 from repro.launch.mesh import make_mesh_auto, shard_map
 
 N = 4
 ROWS, D = 128, 256
+BITS = (2, 4, 8)
 
 
-def measure(collective, bits):
+def measure(spec, bits):
     mesh = make_mesh_auto((N,), ("d",))
-    spec = P("d")
+    pspec = P("d")
 
     def wire_fn(v, err, key):
-        mean, new_err = collective(v[0], err[0], "d", bits, key,
-                                   stochastic=False,
-                                   backend="reference")
-        return mean[None], new_err[None]
+        out, new_err = spec.collective(v[0], err[0], "d", bits, key,
+                                       stochastic=False,
+                                       backend="reference")
+        return out[None], new_err[None]
 
-    fn = jax.jit(shard_map(wire_fn, mesh, (spec, spec, P()),
-                           (spec, spec)))
+    fn = shard_map(wire_fn, mesh, (pspec, pspec, P()), (pspec, pspec))
     v = jax.ShapeDtypeStruct((N, ROWS, D), jnp.float32)
     err = jax.ShapeDtypeStruct((N, ROWS, D), jnp.float32)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    text = fn.lower(v, err, key).compile().as_text()
-    return hlo_cost(text).coll_bytes
+    return measure_collective_bytes(fn, v, err, key)
 
 
 def main():
-    out = {"n": N, "rows": ROWS, "d": D, "bits": {}}
-    for bits in (2, 4, 8):
-        out["bits"][str(bits)] = {
-            "psum": measure(C.ef_psum_mean_bucket, bits),
-            "ring": measure(C.ring_ef_reduce_mean_bucket, bits),
-            "sharded": measure(C.ring_ef_reduce_scatter_bucket, bits),
-            "model": C.ring_wire_bytes((ROWS, D), bits, n=N),
-            "model_sharded": C.ring_wire_bytes((ROWS, D), bits, n=N,
-                                               sharded=True),
-        }
+    names = W.wire_names("dp-grad")
+    out = {"n": N, "rows": ROWS, "d": D, "wires": names, "bits": {}}
+    for bits in BITS:
+        row = {}
+        for name in names:
+            spec = W.get_wire(name)
+            # every (wire, bits) pair compiles and measures for real —
+            # a bits-independent MODEL (fp16) must still match the
+            # compiled bytes at every width, or the pin would miss a
+            # collective whose realized bytes secretly depend on bits
+            row[name] = measure(spec, bits)
+            row["model_" + name] = spec.wire_bytes((ROWS, D), bits, N)
+        # legacy key aliases kept for the pre-registry regressions
+        row["sharded"] = row["ring-sharded"]
+        row["model_sharded"] = row["model_ring-sharded"]
+        row["model"] = row["model_ring"]
+        out["bits"][str(bits)] = row
     print("HLOWIRE " + json.dumps(out))
 
 

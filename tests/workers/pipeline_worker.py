@@ -226,6 +226,28 @@ def check_dp_wire_parity():
     print("OK dp_wire_parity", runs["ring"], runs["ring-sharded"])
 
 
+def check_dp_wire_fp16():
+    """The registry-only fp16 passthrough wire through the REAL
+    pipeline train step: `make_dp_grad_wire` resolves it from the wire
+    registry with zero trainer special-casing (nothing in
+    core/collectives.py knows it exists), and it trains with finite
+    decreasing losses that track the codec wires loosely (same
+    gradients up to f16 rounding vs 4-bit EF quantization)."""
+    cfg, step, state, batch = build(
+        "gpt2-xl-paper", "aqsgd", num_layers=4, warmup=False, lr=1e-3,
+        dp_grad_bits=4, dp_wire="fp16")
+    key = jax.random.PRNGKey(3)
+    losses = []
+    for i in range(4):
+        state, met = step(state, batch, jax.random.fold_in(key, i))
+        losses.append(float(met["loss"]))
+    assert np.all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+    # the cast-error feedback state becomes active after one step
+    assert float(jnp.sum(jnp.abs(state["dp_error"]))) > 0
+    print("OK dp_wire_fp16", losses)
+
+
 def check_expert_parallel():
     """EP MoE == ZeRO-3 MoE numerically (no-drop capacity), and the
     pipeline still trains."""

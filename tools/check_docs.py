@@ -9,9 +9,14 @@ Checks
    resolves to an existing file (anchors and external URLs are not
    followed; badge/action links like ``../../actions/...`` that point
    outside the repo are skipped).
-2. Every PUBLIC module-level function and class in ``src/repro/core``
-   and ``src/repro/kernels`` carries a docstring, and so does every
-   module itself.  "Public" = name not starting with ``_``.
+2. Every PUBLIC module-level function and class in ``src/repro/core``,
+   ``src/repro/kernels`` and ``src/repro/comm`` carries a docstring,
+   and so does every module itself.  "Public" = name not starting
+   with ``_``.
+3. Every ``REPRO_*`` knob exported by ``src/repro/env.py`` (its
+   ``KNOBS`` table, extracted statically — no imports) appears in the
+   README env-var reference, and no module outside ``repro/env.py``
+   reads ``REPRO_*`` from ``os.environ`` directly.
 """
 from __future__ import annotations
 
@@ -24,8 +29,12 @@ ROOT = Path(__file__).resolve().parent.parent
 MD_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
             *sorted((ROOT / "docs").glob("*.md"))]
 PY_DIRS = [ROOT / "src" / "repro" / "core",
-           ROOT / "src" / "repro" / "kernels"]
+           ROOT / "src" / "repro" / "kernels",
+           ROOT / "src" / "repro" / "comm"]
+ENV_PY = ROOT / "src" / "repro" / "env.py"
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ENV_READ_RE = re.compile(
+    r"(?:environ(?:\.get)?\s*[\[(]|getenv\s*\()\s*['\"]REPRO_")
 
 
 def check_links() -> list[str]:
@@ -76,8 +85,41 @@ def check_docstrings() -> list[str]:
     return errors
 
 
+def exported_knobs() -> list[str]:
+    """The REPRO_* knob names in repro/env.py's KNOBS table, read
+    statically (the lint job has no repro install)."""
+    tree = ast.parse(ENV_PY.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "KNOBS"
+                for t in node.targets):
+            return [k.value for k in node.value.keys]
+    raise SystemExit(f"DOCS-GATE {ENV_PY}: no KNOBS table found")
+
+
+def check_env_knobs() -> list[str]:
+    """Every exported REPRO_* knob must appear in the README env-var
+    reference, and nothing outside repro/env.py may read one from
+    os.environ directly."""
+    errors = []
+    readme = (ROOT / "README.md").read_text()
+    for knob in exported_knobs():
+        if knob not in readme:
+            errors.append(f"README.md: env knob `{knob}` exported by "
+                          f"src/repro/env.py is not documented in the "
+                          f"env-var reference")
+    for py in sorted((ROOT / "src").rglob("*.py")):
+        if py == ENV_PY:
+            continue
+        if ENV_READ_RE.search(py.read_text()):
+            errors.append(f"{py.relative_to(ROOT)}: reads a REPRO_* "
+                          f"knob from os.environ directly — route it "
+                          f"through repro/env.py")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_docstrings()
+    errors = check_links() + check_docstrings() + check_env_knobs()
     for e in errors:
         print(f"DOCS-GATE {e}")
     print(f"docs gate: {len(errors)} problem(s)")
