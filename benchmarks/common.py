@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.comm import CommConfig
 from repro.configs.base import get_config
 from repro.core.aqsgd import CompressionConfig
 from repro.data.pipeline import Dataset, DatasetConfig
@@ -47,7 +48,8 @@ def base_params(pretrain_steps: int = 120):
         except Exception:                     # stale cache
             os.remove(path)
     tcfg = sim.SimTrainConfig(
-        num_stages=1, compression=CompressionConfig(mode="fp32"),
+        num_stages=1,
+        comm=CommConfig.from_legacy(CompressionConfig(mode="fp32")),
         optimizer=AdamWConfig(lr=2e-3, warmup_steps=10,
                               total_steps=pretrain_steps,
                               schedule="constant"))
@@ -67,11 +69,13 @@ def finetune(mode: str, fw: int = 4, bw: int = 8, *, steps: int = 60,
     """Fine-tune under a compression scheme; returns (losses, seconds)."""
     tcfg = sim.SimTrainConfig(
         num_stages=stages,
-        compression=CompressionConfig(mode=mode, fw_bits=fw, bw_bits=bw,
-                                      buffer_bits=buffer_bits),
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode=mode, fw_bits=fw, bw_bits=bw,
+                              buffer_bits=buffer_bits),
+            dp_grad_bits=dp_grad_bits),
         optimizer=AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps,
                               schedule="constant"),
-        dp_grad_bits=dp_grad_bits, dp_workers=dp_workers)
+        dp_workers=dp_workers)
     t0 = time.time()
     _, losses = sim.train(MCFG, tcfg, Dataset(FINETUNE_DS),
                           num_steps=steps, batch_size=BATCH,

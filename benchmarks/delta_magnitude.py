@@ -12,6 +12,7 @@ import numpy as np
 
 from benchmarks.common import (BATCH, FINETUNE_DS, MCFG, base_params,
                                write_csv)
+from repro.comm import CommConfig
 from repro.core.aqsgd import CompressionConfig
 from repro.data.pipeline import Dataset
 from repro.models import model as Mo
@@ -23,7 +24,7 @@ def main(epochs: int = 6) -> list:
     ds = Dataset(FINETUNE_DS)
     tcfg = sim.SimTrainConfig(
         num_stages=2,
-        compression=CompressionConfig(mode="fp32"),
+        comm=CommConfig.from_legacy(CompressionConfig(mode="fp32")),
         optimizer=AdamWConfig(lr=3e-4, warmup_steps=5, total_steps=10_000,
                               schedule="constant"))
     state = sim.init_train_state(MCFG, tcfg, ds.num_samples,

@@ -1,0 +1,154 @@
+"""Serving throughput vs bandwidth vs KV precision.
+
+The training-side Tables 2-3 accounting (`benchmarks.throughput_model`)
+pointed at decode: per-token pipeline throughput under FP16 / DirectQ /
+AQ-SGD-delta inter-stage hops, crossed with KV-cache precision.  The
+decode hop ships ``(B, 1, d)`` per token per boundary — tiny, so slow
+networks hurt decode latency far more than prefill — and the KV plane
+sets how many concurrent requests fit HBM (slots scale ~``32/bits``).
+
+All byte claims come from the registered wires' ``wire_bytes`` models
+(the HLO-pinned ones); compute per token per stage is the same
+v5e-roofline estimate the training table uses.  The bench asserts the
+compressed hop is STRICTLY below the fp16 hop in modeled bytes/token —
+the acceptance gate for the serving plane.
+
+``--tiny --json out.json`` is the CI smoke configuration: it also runs
+a real (smoke-config) decode loop per KV setting for a measured tok/s
+column.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import write_csv
+from repro.configs.base import get_config
+from repro.serving.delta import DeltaHopCodec
+from repro.serving.kvcache import KVCodec
+
+BANDWIDTHS = {            # bits/s
+    "10Gbps": 10e9, "1Gbps": 1e9, "300Mbps": 300e6, "100Mbps": 100e6,
+}
+HOPS = [
+    ("fp16", None),
+    ("DirectQ 8", DeltaHopCodec(mode="directq", bits=8)),
+    ("AQ-delta 8", DeltaHopCodec(mode="aqsgd", bits=8)),
+    ("AQ-delta 4", DeltaHopCodec(mode="aqsgd", bits=4)),
+]
+KV_BITS = (0, 8, 4)
+
+CFG = get_config("gpt2-xl-paper")
+BATCH, K, HBM_GB = 8, 8, 16
+_MFU = 0.40
+TOK_MS = 2 * CFG.params_count() / K / (197e12 * _MFU) * 1e3
+
+
+def hop_bytes(codec) -> int:
+    """Modeled bytes for one token's hidden-state hop at one boundary."""
+    if codec is None:                       # fp16 baseline wire
+        return BATCH * CFG.d_model * 2
+    return codec.hop_bytes(BATCH, CFG.d_model)
+
+
+def tokens_per_s(codec, bw: float) -> float:
+    """Sequential decode: each token crosses K-1 boundaries; hop latency
+    does NOT overlap compute (the next stage is idle until it lands)."""
+    hop_ms = hop_bytes(codec) * 8 / bw * 1e3
+    return BATCH * 1e3 / (K * TOK_MS + (K - 1) * hop_ms)
+
+
+def kv_tokens_per_slot(bits: int) -> tuple:
+    """(bytes/token stored, max concurrent 8k-context requests/chip)."""
+    codec = KVCodec(bits=bits)
+    per_tok = codec.stored_bytes(
+        (1, 1, CFG.num_kv_heads, CFG.head_dim)) * 2 * CFG.num_layers
+    ctx_bytes = per_tok * 8192
+    return per_tok, int(HBM_GB * 2 ** 30 * 0.5 // ctx_bytes)
+
+
+def _measured_tiny(kv_bits: int) -> float:
+    """Real smoke-config decode loop -> tok/s (CI sanity, not a claim)."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as Mo
+    from repro.serving.kvcache import quantize_caches
+
+    cfg = get_config("gemma2-9b", smoke=True)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    codec = KVCodec(bits=kv_bits) if kv_bits else None
+    caches = Mo.init_caches(cfg, 2, 24, jnp.float32)
+    if codec is not None:
+        caches = quantize_caches(cfg, caches, codec)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              cfg.vocab_size)
+    logits, caches = Mo.forward_with_caches(
+        params, cfg, toks, caches, logits_last_only=True, kv_codec=codec)
+    step = jax.jit(lambda p, c, t: Mo.forward_with_caches(
+        p, cfg, t, c, logits_last_only=True, kv_codec=codec))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    logits, caches = step(params, caches, tok)     # compile
+    n, t0 = 8, time.time()
+    for _ in range(n):
+        logits, caches = step(params, caches, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    jax.block_until_ready(tok)
+    return 2 * n / (time.time() - t0)
+
+
+def main(tiny: bool = False, json_path: str | None = None) -> dict:
+    results: dict = {"tiny": tiny, "hop_bytes": {}, "kv": {},
+                     "throughput": {}}
+    print(f"# GPT2-XL decode, batch {BATCH}, {K} stages: "
+          f"{TOK_MS * K:.3f}ms compute/token")
+
+    fp16 = hop_bytes(None)
+    for name, codec in HOPS:
+        hb = hop_bytes(codec)
+        results["hop_bytes"][name] = hb
+        print(f"hop,{name},{hb} B/token/boundary")
+        if codec is not None:
+            assert hb < fp16, (name, hb, fp16)   # the acceptance gate
+
+    header = ["bandwidth"] + [n for n, _ in HOPS]
+    rows = []
+    for bname, bw in BANDWIDTHS.items():
+        row = [bname] + [f"{tokens_per_s(c, bw):.2f}" for _, c in HOPS]
+        rows.append(row)
+        results["throughput"][bname] = dict(zip(header[1:], row[1:]))
+        print("tokens_per_s," + ",".join(row))
+    write_csv("serving_throughput.csv", ",".join(header), rows)
+
+    kv_rows = []
+    for bits in KV_BITS:
+        per_tok, slots = kv_tokens_per_slot(bits)
+        entry = {"bytes_per_token": per_tok, "requests_8k_ctx": slots}
+        if tiny:
+            entry["measured_tok_s"] = round(_measured_tiny(bits), 2)
+        results["kv"][str(bits)] = entry
+        kv_rows.append((bits or "fp32", per_tok, slots))
+        print(f"kv,{bits or 'fp32'},{per_tok} B/token,"
+              f"{slots} reqs@8k" +
+              (f",{entry['measured_tok_s']} tok/s measured"
+               if tiny else ""))
+    write_csv("serving_kv.csv", "kv_bits,bytes_per_token,requests_8k_ctx",
+              kv_rows)
+
+    slow = tokens_per_s(HOPS[-1][1], BANDWIDTHS["100Mbps"])
+    base = tokens_per_s(None, BANDWIDTHS["100Mbps"])
+    print(f"tokens_per_s,speedup_delta4_vs_fp16_100Mbps,"
+          f"{slow / base:.2f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {json_path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(tiny=args.tiny, json_path=args.json)

@@ -15,6 +15,7 @@ import os
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.comm import CommConfig
 from repro.configs.base import get_config
 from repro.core.aqsgd import CompressionConfig, buffer_nbytes
 from repro.core.quantization import wire_bytes
@@ -50,7 +51,8 @@ def main():
                                  vocab_size=cfg.vocab_size))
     print("phase 1: pre-training (fp32)...")
     tcfg = sim.SimTrainConfig(
-        num_stages=1, compression=CompressionConfig(mode="fp32"),
+        num_stages=1,
+        comm=CommConfig.from_legacy(CompressionConfig(mode="fp32")),
         optimizer=AdamWConfig(lr=2e-3, warmup_steps=10,
                               schedule="constant"))
     state, losses = sim.train(cfg, tcfg, data,
@@ -62,7 +64,7 @@ def main():
     cc = CompressionConfig(mode="aqsgd", fw_bits=args.fw_bits,
                            bw_bits=args.bw_bits)
     tcfg = sim.SimTrainConfig(
-        num_stages=args.stages, compression=cc,
+        num_stages=args.stages, comm=CommConfig.from_legacy(cc),
         optimizer=AdamWConfig(lr=3e-4, warmup_steps=5,
                               schedule="constant"))
     ft_data = Dataset(DatasetConfig(num_samples=48, seq_len=args.seq,

@@ -6,6 +6,7 @@ that it tracks uncompressed training where direct quantization does not.
 """
 import numpy as np
 
+from repro.comm import CommConfig
 from repro.configs.base import get_config
 from repro.core.aqsgd import CompressionConfig
 from repro.data.pipeline import Dataset, DatasetConfig
@@ -18,7 +19,8 @@ data = Dataset(DatasetConfig(num_samples=32, seq_len=32, vocab_size=512))
 
 print("pre-training a base model (fp32)...")
 base_tcfg = sim.SimTrainConfig(
-    num_stages=1, compression=CompressionConfig(mode="fp32"),
+    num_stages=1,
+    comm=CommConfig.from_legacy(CompressionConfig(mode="fp32")),
     optimizer=AdamWConfig(lr=2e-3, warmup_steps=5, schedule="constant"))
 base_state, base_losses = sim.train(cfg, base_tcfg, data, num_steps=60,
                                     batch_size=8)
@@ -28,7 +30,8 @@ results = {}
 for mode in ("fp32", "aqsgd", "directq"):
     tcfg = sim.SimTrainConfig(
         num_stages=4,
-        compression=CompressionConfig(mode=mode, fw_bits=2, bw_bits=4),
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode=mode, fw_bits=2, bw_bits=4)),
         optimizer=AdamWConfig(lr=3e-4, warmup_steps=5,
                               schedule="constant"))
     _, losses = sim.train(cfg, tcfg, data, num_steps=40, batch_size=8,

@@ -1,43 +1,94 @@
 """Batched serving example: prefill a batch of prompts, then decode with
 KV caches through the public serve path (the same code the decode_32k /
-long_500k dry-run shapes lower at 256-chip scale).
+long_500k dry-run shapes lower at 256-chip scale), plus a continuous-
+batching pass over mixed-length prompts.
+
+Communication knobs are the one CommConfig surface shared with the
+train/serve launchers: ``--kv-bits 8`` stores the demo caches as packed
+codes + group scales, ``--comm-config`` accepts the full JSON.
 
 Runs three model families to show the cache machinery: dense GQA
 (gemma2), attention-free SSM (mamba2), hybrid (zamba2).
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --tiny --kv-bits 8
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.comm import config as comm_cli
 from repro.configs.base import get_config
 from repro.models import model as Mo
+from repro.serving import ContinuousBatcher, KVCodec, quantize_caches
 
-BATCH, PROMPT, GEN = 4, 24, 12
 
-for arch in ("gemma2-9b", "mamba2-1.3b", "zamba2-2.7b"):
-    cfg = get_config(arch, smoke=True)
-    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
-    caches = Mo.init_caches(cfg, BATCH, PROMPT + GEN, jnp.float32)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT),
-                                 0, cfg.vocab_size)
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run: one arch, short prompts")
+    comm_cli.add_cli_args(ap)
+    args = ap.parse_args()
+    comm = comm_cli.from_args(args)
+    kv_codec = KVCodec.from_comm(comm)
+    kvc = kv_codec if kv_codec.bits else None
+    print("comm:", comm.to_json())
 
-    t0 = time.time()
-    logits, caches = Mo.forward_with_caches(params, cfg, prompts, caches,
-                                            logits_last_only=True)
-    step = jax.jit(lambda p, c, t: Mo.forward_with_caches(
-        p, cfg, t, c, logits_last_only=True))
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    out = [tok]
-    for _ in range(GEN - 1):
-        logits, caches = step(params, caches, tok)
+    batch, prompt, gen = (2, 8, 4) if args.tiny else (4, 24, 12)
+    archs = ("gemma2-9b",) if args.tiny \
+        else ("gemma2-9b", "mamba2-1.3b", "zamba2-2.7b")
+
+    for arch in archs:
+        cfg = get_config(arch, smoke=True)
+        params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+        caches = Mo.init_caches(cfg, batch, prompt + gen, jnp.float32)
+        # hybrid keeps a raw cache (kv.bits>0 is dense-family only)
+        quant = kvc if cfg.family != "hybrid" else None
+        if quant is not None:
+            caches = quantize_caches(cfg, caches, quant)
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (batch, prompt), 0, cfg.vocab_size)
+
+        t0 = time.time()
+        logits, caches = Mo.forward_with_caches(
+            params, cfg, prompts, caches, logits_last_only=True,
+            kv_codec=quant)
+        step = jax.jit(lambda p, c, t, _cfg=cfg, _q=quant:
+                       Mo.forward_with_caches(p, _cfg, t, c,
+                                              logits_last_only=True,
+                                              kv_codec=_q))
         tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(f"{arch:14s} [{cfg.family:6s}] prefill {BATCH}x{PROMPT} + "
-          f"decode {GEN}: {dt:.1f}s; sample: {gen[0][:8].tolist()}")
-print("serving path OK for attention, SSM and hybrid cache types")
+        out = [tok]
+        for _ in range(gen - 1):
+            logits, caches = step(params, caches, tok)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        gen_toks = jnp.concatenate(out, axis=1)
+        print(f"{arch:14s} [{cfg.family:6s}] prefill {batch}x{prompt} + "
+              f"decode {gen}: {dt:.1f}s; sample: "
+              f"{gen_toks[0][:8].tolist()}")
+
+    # ---- continuous batching over mixed-length prompts ---------------------
+    cfg = get_config("gemma2-9b", smoke=True)
+    params = Mo.init_params(cfg, jax.random.PRNGKey(0))
+    bat = ContinuousBatcher(params, cfg, num_slots=batch,
+                            cache_len=prompt + gen, kv_codec=kvc)
+    rng = np.random.default_rng(2)
+    for _ in range(batch * 2):
+        plen = int(rng.integers(2, prompt + 1))
+        bat.submit(rng.integers(0, cfg.vocab_size, plen).tolist(),
+                   max_new_tokens=gen)
+    reqs = bat.run()
+    assert all(r.state == "DONE" for r in reqs)
+    lens = sorted({len(r.prompt) for r in reqs})
+    print(f"continuous: {len(reqs)} mixed-length requests "
+          f"(lens {lens}) over {batch} slots OK")
+    print("serving path OK for attention, SSM and hybrid cache types")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ activations/gradients over the slow client<->server link.  AQ-SGD keeps
 """
 import numpy as np
 
+from repro.comm import CommConfig
 from repro.configs.base import get_config
 from repro.core.aqsgd import CompressionConfig
 from repro.core.quantization import wire_bytes
@@ -23,7 +24,8 @@ data = Dataset(DatasetConfig(num_samples=32, seq_len=32, vocab_size=512,
                              seed=21))
 
 base_tcfg = sim.SimTrainConfig(
-    num_stages=1, compression=CompressionConfig(mode="fp32"),
+    num_stages=1,
+    comm=CommConfig.from_legacy(CompressionConfig(mode="fp32")),
     optimizer=AdamWConfig(lr=2e-3, warmup_steps=5, schedule="constant"))
 base, _ = sim.train(cfg, base_tcfg, data, num_steps=60, batch_size=8)
 
@@ -33,7 +35,8 @@ final = {}
 for mode in ("fp32", "aqsgd", "directq"):
     tcfg = sim.SimTrainConfig(
         num_stages=3,
-        compression=CompressionConfig(mode=mode, fw_bits=2, bw_bits=8),
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode=mode, fw_bits=2, bw_bits=8)),
         optimizer=AdamWConfig(lr=3e-4, warmup_steps=5,
                               schedule="constant"))
     _, losses = sim.train(cfg, tcfg, data, num_steps=40, batch_size=8,

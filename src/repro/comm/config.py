@@ -2,32 +2,40 @@
 
 The paper's end-to-end story ("all communications between machines —
 model gradients, forward activations, and backward gradients — are
-compressed") is four planes; this module is their ONE configuration
-surface:
+compressed") plus the serving-side cache is five planes; this module
+is their ONE configuration surface:
 
 * ``fw``   — forward activations on the pipeline axis (AQ-SGD deltas
-  or DirectQ codes on the ``ppermute`` wire);
+  or DirectQ codes on the ``ppermute`` wire; serving's decode hop
+  rides the same plane — `serving.delta`);
 * ``bw``   — backward activation gradients (DirectQ, reverse perm);
 * ``zbuf`` — the z-bit stored message buffers (paper §H.5 — HBM
   residency, not network bytes);
 * ``dp``   — model gradients on the data-parallel axes, carried by a
   named wire from the registry (`comm.wires`): ``ring`` / ``psum`` /
-  ``ring-sharded`` / ``fp16`` / whatever a later PR registers.
+  ``ring-sharded`` / ``fp16`` / whatever a later PR registers;
+* ``kv``   — the serving KV cache (`serving.kvcache`): b-bit packed
+  codes + group scales in paged HBM slots, quantize-on-append /
+  dequantize-on-attend.  ``group_d`` is the scale-group width along
+  head_dim (0 = one scale per head row); like ``zbuf`` this is HBM
+  residency, not network bytes.
 
 Each plane is a :class:`PlaneConfig` (bits, stochastic, backend,
 error-feedback, wire name, scale-group width); the whole thing
 serializes to/from JSON (``to_json``/``from_json`` — the
 ``--comm-config`` CLI input) and to/from flat CLI flags
-(``add_cli_args``/``from_args``/``to_flags`` — the legacy
-``--fw-bits ... --dp-wire ...`` surface), with round-trip equality
-gated by tests/test_comm.py.  Wire names are validated against the
-registry at construction, with a did-you-mean message.
+(``add_cli_args``/``from_args``/``to_flags`` — the
+``--fw-bits ... --dp-wire ... --kv-bits`` surface), with round-trip
+equality gated by tests/test_comm.py.  Wire names are validated
+against the registry at construction, with a did-you-mean message.
 
 `training/pipeline.py::PipelineConfig`, `training/simulated.py::
-SimTrainConfig` and `launch/train.py` all consume this; their old
-scattered kwargs (``fw_bits``/``buffer_bits``/``dp_grad_bits``/
-``dp_wire``/...) remain as thin deprecation shims that normalize into
-a `CommConfig`.
+SimTrainConfig`, `launch/train.py` and `launch/serve.py` all consume
+this.  The pre-registry scattered kwargs (``fw_bits``/``buffer_bits``/
+``dp_grad_bits``/``dp_wire``/...) on the trainer configs are GONE:
+passing one raises with a migration message (they spent their one
+deprecation release warning).  `CommConfig.from_legacy` remains as
+the explicit converter from a `CompressionConfig` + DP knobs.
 """
 from __future__ import annotations
 
@@ -43,12 +51,12 @@ from repro.core import grad_compress as GC
 from repro.core.aqsgd import CompressionConfig
 
 MODES = ("fp32", "directq", "aqsgd")
-PLANE_FIELDS = ("fw", "bw", "zbuf", "dp")
+PLANE_FIELDS = ("fw", "bw", "zbuf", "dp", "kv")
 # plane field name -> registry plane the wire name resolves against
 PLANE_OF = {"fw": "fw-activation", "bw": "bw-gradient",
-            "zbuf": "z-buffer", "dp": "dp-grad"}
+            "zbuf": "z-buffer", "dp": "dp-grad", "kv": "kv-cache"}
 _DEFAULT_WIRE = {"fw": "ppermute", "bw": "ppermute", "zbuf": "hbm",
-                 "dp": "ring"}
+                 "dp": "ring", "kv": "paged"}
 
 
 @dataclass(frozen=True)
@@ -85,12 +93,18 @@ def _plane(**kw):
 
 @dataclass(frozen=True)
 class CommConfig:
-    """The four communication planes plus the activation algorithm.
+    """The five communication planes plus the activation algorithm.
 
     ``mode`` is the activation-boundary algorithm (``aqsgd`` /
     ``directq`` / ``fp32``) — it governs the fw plane and whether
     message buffers (and hence the zbuf plane) exist at all.
     ``buffer_dtype`` is the raw-storage dtype when ``zbuf.bits == 0``.
+    ``kv`` is the serving cache plane: ``kv.bits=0`` keeps the raw
+    cache dtype, ``kv.bits>0`` stores b-bit packed codes + f32 group
+    scales (``kv.group_d`` = scale-group width along head_dim, 0 = one
+    scale per head row); rounding defaults deterministic — a stored
+    cache re-read many times should not be a noise source, but the
+    knob exists for the error-analysis ablations.
     Construction validates modes, wire names (did-you-mean on typos),
     and fills empty wire names with each plane's default."""
     mode: str = "aqsgd"
@@ -98,6 +112,7 @@ class CommConfig:
     bw: PlaneConfig = field(default_factory=_plane(bits=8))
     zbuf: PlaneConfig = field(default_factory=_plane(stochastic=False))
     dp: PlaneConfig = field(default_factory=_plane())
+    kv: PlaneConfig = field(default_factory=_plane(stochastic=False))
     buffer_dtype: str = "float32"
 
     def __post_init__(self):
@@ -166,7 +181,9 @@ class CommConfig:
                     dp_grad_group: int = 0) -> "CommConfig":
         """Build from the pre-registry knob set: a `CompressionConfig`
         plus the scattered ``PipelineConfig``/``SimTrainConfig`` DP
-        fields.  The deprecation shims in those configs route here."""
+        fields.  The explicit migration path now that those configs
+        reject the old kwargs (`reject_legacy_comm`) — callers convert
+        the knob set here and pass the result as ``comm=``."""
         cc = cc if cc is not None else CompressionConfig()
         zb = cc.buffer_bits if buffer_bits is None else buffer_bits
         return cls(
@@ -181,6 +198,7 @@ class CommConfig:
                            wire=dp_wire, group_d=dp_grad_group,
                            backend=cc.backend,
                            stochastic=cc.stochastic),
+            kv=PlaneConfig(stochastic=False, backend=cc.backend),
             buffer_dtype=cc.buffer_dtype)
 
     # -- JSON -------------------------------------------------------------
@@ -238,13 +256,17 @@ class CommConfig:
         across planes, non-default fw/bw/zbuf wires) — use
         ``--comm-config`` JSON for those."""
         planes = [self.fw, self.bw, self.dp]
-        if len({p.backend for p in planes + [self.zbuf]}) > 1:
+        if len({p.backend for p in planes + [self.zbuf, self.kv]}) > 1:
             raise ValueError("per-plane backends differ; flat flags "
                              "cannot express this — use --comm-config")
         if len({p.stochastic for p in planes}) > 1:
             raise ValueError("per-plane stochastic differs; use "
                              "--comm-config")
-        for fname in ("fw", "bw", "zbuf"):
+        if self.kv.stochastic:
+            raise ValueError("kv.stochastic is not flag-expressible "
+                             "(flat --kv-bits builds a deterministic "
+                             "cache codec); use --comm-config")
+        for fname in ("fw", "bw", "zbuf", "kv"):
             if getattr(self, fname).wire != _DEFAULT_WIRE[fname]:
                 raise ValueError(f"non-default {fname} wire; use "
                                  "--comm-config")
@@ -261,6 +283,7 @@ class CommConfig:
                  "--dp-grad-bits", str(self.dp.bits),
                  "--dp-wire", self.dp.wire,
                  "--dp-grad-group", str(self.dp_group_d),
+                 "--kv-bits", str(self.kv.bits),
                  "--backend", self.fw.backend]
         if not self.fw.stochastic:
             flags.append("--no-stochastic")
@@ -273,45 +296,24 @@ def _default_plane(fname: str) -> PlaneConfig:
     return getattr(CommConfig(), fname)
 
 
-def resolve_legacy_comm(cls_name: str, comm, legacy: dict, mirrors: dict,
-                        build) -> CommConfig:
-    """The shared deprecation-shim protocol for configs that grew a
-    ``comm`` field (`PipelineConfig`, `SimTrainConfig`).  The legacy
-    kwargs are ``InitVar``s on those configs — construction-only, so
-    ``dataclasses.replace`` never re-passes stale values and
-    ``replace(cfg, comm=new)`` just works:
-
-    * ``comm is None`` — warn if any legacy kwarg was passed, then
-      ``build()`` the CommConfig from them;
-    * ``comm`` given — any legacy value alongside it must match
-      ``mirrors`` (the legacy views of ``comm``) or this raises.
-      NOTHING is ever silently dropped: ``dataclasses.replace``
-      re-passes the mirror values of the old comm (via the reader
-      properties), so both ``replace(cfg, dp_wire=...)`` and
-      ``replace(cfg, comm=new)`` arrive here as a mismatch and get the
-      explicit error — the supported comm-swap path is
-      ``cfg.with_comm(new)``.
-
-    ``legacy`` maps field name -> passed value (None = not passed);
-    ``build`` is called only when ``comm`` is None."""
-    if comm is None:
-        if any(v is not None for v in legacy.values()):
-            import warnings
-            warnings.warn(
-                f"{cls_name}({'/'.join(k + '=' for k in legacy)}) is "
-                f"deprecated; pass comm=CommConfig(...) (repro.comm)",
-                DeprecationWarning, stacklevel=4)
-        return build()
-    for name, val in legacy.items():
-        if val is not None and val != mirrors[name]:
-            raise ValueError(
-                f"{cls_name}: legacy value {name}={val!r} conflicts "
-                f"with comm ({mirrors[name]!r}).  Set it through "
-                f"comm=CommConfig(...); to swap comm on an existing "
-                f"config use cfg.with_comm(new_comm) — "
-                f"dataclasses.replace re-passes the deprecated mirror "
-                f"kwargs and cannot tell which side you changed")
-    return comm
+def reject_legacy_comm(cls_name: str, legacy: dict) -> None:
+    """The post-deprecation gate for configs whose scattered comm
+    kwargs (``compression=``, ``dp_grad_bits=``, ``dp_wire=``, ...)
+    have been removed in favor of ``comm=CommConfig(...)``.  The old
+    names are kept as construction-only parameters SOLELY so that
+    passing one raises THIS loud, actionable error instead of an
+    opaque ``unexpected keyword argument``.  ``legacy`` maps kwarg
+    name -> passed value (None = not passed)."""
+    passed = sorted(k for k, v in legacy.items() if v is not None)
+    if passed:
+        raise TypeError(
+            f"{cls_name}({', '.join(k + '=...' for k in passed)}) was "
+            f"removed: the scattered comm kwargs spent their one "
+            f"deprecation release and are now errors.  Pass "
+            f"comm=CommConfig(...) (repro.comm) instead — "
+            f"CommConfig.from_legacy(CompressionConfig(...), "
+            f"dp_grad_bits=..., dp_wire=...) converts the old knob "
+            f"set verbatim")
 
 
 def add_cli_args(ap) -> None:
@@ -339,6 +341,10 @@ def add_cli_args(ap) -> None:
     ap.add_argument("--dp-grad-group", type=int,
                     default=GC.DEFAULT_GROUP_D,
                     help="DP gradient-bucket scale-group width")
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    help="serving KV-cache code width (0 = raw cache "
+                         "dtype; quantize-on-append, "
+                         "dequantize-on-attend)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "reference", "pallas"],
                     help="boundary codec backend for every plane")
@@ -374,4 +380,6 @@ def from_args(args) -> "CommConfig":
         dp=PlaneConfig(bits=args.dp_grad_bits, wire=args.dp_wire,
                        group_d=args.dp_grad_group,
                        error_feedback=not args.no_error_feedback,
-                       **common))
+                       **common),
+        kv=PlaneConfig(bits=getattr(args, "kv_bits", 0),
+                       stochastic=False, backend=args.backend))

@@ -40,7 +40,8 @@ from repro.core import collectives as C
 from repro.core import grad_compress as GC
 from repro.core import quantization as Q
 
-PLANES = ("fw-activation", "bw-gradient", "z-buffer", "dp-grad")
+PLANES = ("fw-activation", "bw-gradient", "z-buffer", "dp-grad",
+          "kv-cache")
 
 
 @dataclass(frozen=True)
@@ -160,6 +161,22 @@ def _fp16_bytes(shape, bits: int, n: int = 1) -> int:
     return rows * d * 2
 
 
+def _kv_bytes(shape, bits: int, n: int = 1) -> int:
+    """Stored bytes of one quantized KV append: packed b-bit codes plus
+    one f32 scale per quantization group.  ``shape`` is the GROUPED
+    value shape ``(..., group)`` — `serving.kvcache.KVCodec` reshapes
+    ``(B, S, Hk, head_dim)`` values into scale groups before encoding,
+    so the rows of this model are (token, head, group) triples.
+    ``bits=0`` means the cache is raw f32 (no codes, no scales).
+    Pinned against the output buffers of the compiled append op by
+    tests/test_hlo_cost.py (HBM residency, like the z-buffer plane)."""
+    del n
+    if not bits:
+        import numpy as np
+        return int(np.prod(shape)) * 4
+    return Q.wire_bytes(shape, bits)
+
+
 # ---------------------------------------------------------------------------
 # the fp16 passthrough DP wire — the registry-only wire: nothing in
 # core/collectives.py special-cases it, yet it trains end-to-end
@@ -227,6 +244,13 @@ register_wire(
     summary="z-bit stored message buffers (paper §H.5): HBM residency, "
             "not network bytes",
     wire_bytes=_codec_bytes)
+
+register_wire(
+    "paged", plane="kv-cache", network=False,
+    summary="b-bit packed KV codes + f32 group scales in paged "
+            "per-request HBM cache slots (quantize-on-append, "
+            "dequantize-on-attend)",
+    wire_bytes=_kv_bytes)
 
 register_wire(
     "ring",

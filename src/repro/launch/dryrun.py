@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm.config import CommConfig
 from repro.configs.base import (ARCHS, INPUT_SHAPES, ModelConfig,
                                 get_config, shape_applies)
 from repro.core.aqsgd import CompressionConfig
@@ -101,9 +102,11 @@ def lower_train(cfg: ModelConfig, mesh, shape, *,
     br = shape.global_batch // d_repl
     m = microbatches or br             # default microbatch size 1
     pcfg = PL.PipelineConfig(
-        microbatches=m, moe_mode=moe_mode, buffer_bits=buffer_bits,
-        compression=CompressionConfig(mode=compression, fw_bits=fw_bits,
-                                      bw_bits=bw_bits))
+        microbatches=m, moe_mode=moe_mode,
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode=compression, fw_bits=fw_bits,
+                              bw_bits=bw_bits),
+            buffer_bits=buffer_bits))
     step, meta = PL.make_train_step(
         cfg, pcfg, mesh, AdamWConfig(state_bits=opt_state_bits),
         global_batch=shape.global_batch,

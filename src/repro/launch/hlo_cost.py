@@ -262,3 +262,33 @@ def measure_collective_bytes(fn, *arg_structs) -> float:
     import jax
     text = jax.jit(fn).lower(*arg_structs).compile().as_text()
     return hlo_cost(text).coll_bytes
+
+
+def entry_result_bytes(text: str) -> float:
+    """Sum the byte sizes of the ENTRY computation's ROOT result — the
+    buffers the compiled program hands back to the caller."""
+    in_entry = False
+    for raw in text.splitlines():
+        s = raw.strip()
+        if not in_entry:
+            if re.match(r"^ENTRY\s", s):
+                in_entry = True
+            continue
+        if s.startswith("}"):
+            break
+        if s.startswith("ROOT ") and " = " in s:
+            rhs = s.split(" = ", 1)[1]
+            m = _OPCALL.search(rhs)
+            return _type_bytes(rhs[:m.start()] if m else rhs)
+    raise ValueError("no ROOT instruction in ENTRY computation")
+
+
+def measure_result_bytes(fn, *arg_structs) -> float:
+    """Compile ``fn`` on ShapeDtypeStructs and sum its ENTRY output
+    buffer bytes from the optimized HLO — the HBM-residency analogue of
+    `measure_collective_bytes` for planes whose payload never crosses
+    the network (z-buffer, kv-cache): the bytes the program materializes
+    for the caller are what the plane's ``wire_bytes`` model claims."""
+    import jax
+    text = jax.jit(fn).lower(*arg_structs).compile().as_text()
+    return entry_result_bytes(text)

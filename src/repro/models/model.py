@@ -421,22 +421,74 @@ def _attn_layer_cached(cfg, lp, h, positions, window, cache_k, cache_v,
     return h, (new_cache["k"], new_cache["v"]), aux
 
 
+def _staged_cached_scan(step, carry, xs, *, num_stages, boundary_fn,
+                        boundary_state, get_h, set_h):
+    """`lax.scan` over stacked layers, cut into ``num_stages``
+    contiguous chunks with ``boundary_fn(state, h, idx)`` applied to
+    the carried hidden state between chunks — the serving mirror of
+    `trunk_forward`'s stage loop, for scans that also thread per-layer
+    cache slices through ``xs``/``ys``.  Returns
+    (carry, ys, boundary_state)."""
+    if num_stages == 1 or boundary_fn is None:
+        carry, ys = jax.lax.scan(step, carry, xs)
+        return carry, ys, boundary_state
+    n = jax.tree.leaves(xs)[0].shape[0]
+    assert n % num_stages == 0, (n, num_stages)
+    per = n // num_stages
+    parts = []
+    for si in range(num_stages):
+        sl = slice(si * per, (si + 1) * per)
+        carry, y = jax.lax.scan(step, carry,
+                                jax.tree.map(lambda a: a[sl], xs))
+        parts.append(y)
+        if si < num_stages - 1:
+            boundary_state, h = boundary_fn(boundary_state,
+                                            get_h(carry), si)
+            carry = set_h(carry, h)
+    ys = jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *parts)
+    return carry, ys, boundary_state
+
+
 def forward_with_caches(params: Params, cfg: ModelConfig, tokens, caches,
                         *, patches=None, frames=None, block_k: int = 512,
-                        logits_last_only: bool = False):
+                        logits_last_only: bool = False,
+                        num_stages: int = 1, boundary_fn=None,
+                        kv_codec=None):
     """Unified prefill (S > 1) / decode (S = 1) step.
 
     tokens: (B, S).  Returns (logits (B, S, V) fp32, new_caches).
     logits_last_only: return only the final position's logits — essential
     for full-scale prefill (B×S×V logits would be TBs).
+
+    Serving-plane hooks (`repro.serving`):
+
+    * ``num_stages``/``boundary_fn`` — cut the layer scan into pipeline
+      stage groups and run ``boundary_fn(state, h, idx) -> (state, h)``
+      on the hidden state between them (the compressed decode hop,
+      `serving.delta.DeltaHopCodec`).  The hop's reference buffers ride
+      IN the cache dict under ``"hop_m"`` (f32 (nb, B, 1, d)) so they
+      batch/shard/vmap exactly like the KV state they live next to.
+    * ``kv_codec`` — a `serving.kvcache.KVCodec` with ``bits > 0``
+      switches the scanned ``k``/``v`` stores to the quantized layout
+      (``{k,v}_codes``/``{k,v}_scale``, see `serving.kvcache`):
+      dequantize-on-attend, then encode only this step's fresh rows.
     """
     caches = dict(caches)
     pos0 = caches.pop("pos")
+    hop_m = caches.pop("hop_m", None)
+    boundary_state = {"m": hop_m} if hop_m is not None else None
+    quant = (kv_codec is not None and kv_codec.bits
+             and cfg.family in ("dense", "vlm", "moe", "audio"))
     h = embed_tokens(params, cfg, tokens, patches)
     b, s = h.shape[0], h.shape[1]
     positions = pos0 + jnp.broadcast_to(
         jnp.arange(s, dtype=jnp.int32), (b, s))
-    cache_len = caches["k"].shape[2] if "k" in caches else 0
+    if "k" in caches:
+        cache_len = caches["k"].shape[2]
+    elif "k_codes" in caches:
+        cache_len = caches["k_codes"].shape[2]
+    else:
+        cache_len = 0
     fam = cfg.family
     aux = 0.0
     new_caches = {"pos": pos0 + s}
@@ -463,22 +515,53 @@ def forward_with_caches(params: Params, cfg: ModelConfig, tokens, caches,
 
         def step(carry, xs):
             hh, auxc = carry
-            if fam == "audio":
-                lp, w, ck, cv, xk_l, xv_l = xs
-                xkv = (xk_l, xv_l)
+            if quant:
+                if fam == "audio":
+                    lp, w, kc, ksc, vc, vsc, xk_l, xv_l = xs
+                    xkv = (xk_l, xv_l)
+                else:
+                    lp, w, kc, ksc, vc, vsc = xs
+                    xkv = None
+                ck = kv_codec.decode(kc, ksc, cfg.jax_dtype)
+                cv = kv_codec.decode(vc, vsc, cfg.jax_dtype)
             else:
-                lp, w, ck, cv = xs
-                xkv = None
+                if fam == "audio":
+                    lp, w, ck, cv, xk_l, xv_l = xs
+                    xkv = (xk_l, xv_l)
+                else:
+                    lp, w, ck, cv = xs
+                    xkv = None
             hh, (nk, nv), a = _attn_layer_cached(
                 cfg, lp, hh, positions, w, ck, cv, pos0, block_k, xkv)
+            if quant:
+                # encode ONLY this step's fresh rows back into the code
+                # store — old tokens keep their original single encoding
+                fk = jax.lax.dynamic_slice_in_dim(nk, pos0, s, axis=1)
+                fv = jax.lax.dynamic_slice_in_dim(nv, pos0, s, axis=1)
+                sk = kv_codec.append({"codes": kc, "scale": ksc}, fk, pos0)
+                sv = kv_codec.append({"codes": vc, "scale": vsc}, fv, pos0)
+                return (hh, auxc + a), (sk["codes"], sk["scale"],
+                                        sv["codes"], sv["scale"])
             return (hh, auxc + a), (nk, nv)
 
-        xs = (params["layers"], windows, caches["k"], caches["v"])
+        if quant:
+            xs = (params["layers"], windows,
+                  caches["k_codes"], caches["k_scale"],
+                  caches["v_codes"], caches["v_scale"])
+        else:
+            xs = (params["layers"], windows, caches["k"], caches["v"])
         if fam == "audio":
             xs = xs + (caches["xk"], caches["xv"])
-        (h, aux2), (nk, nv) = jax.lax.scan(step, (h, 0.0), xs)
+        (h, aux2), ys, boundary_state = _staged_cached_scan(
+            step, (h, 0.0), xs, num_stages=num_stages,
+            boundary_fn=boundary_fn, boundary_state=boundary_state,
+            get_h=lambda c: c[0], set_h=lambda c, hh: (hh, c[1]))
         aux += aux2
-        new_caches["k"], new_caches["v"] = nk, nv
+        if quant:
+            (new_caches["k_codes"], new_caches["k_scale"],
+             new_caches["v_codes"], new_caches["v_scale"]) = ys
+        else:
+            new_caches["k"], new_caches["v"] = ys
         if fam == "audio":
             new_caches["xk"], new_caches["xv"] = caches["xk"], caches["xv"]
 
@@ -495,8 +578,11 @@ def forward_with_caches(params: Params, cfg: ModelConfig, tokens, caches,
                 nst, ncv = state["ssm"], state["conv"].astype(cv.dtype)
             return hh + out, (nst.astype(st.dtype), ncv)
 
-        h, (nst, ncv) = jax.lax.scan(
-            step, h, (params["layers"], caches["ssm"], caches["conv"]))
+        h, (nst, ncv), boundary_state = _staged_cached_scan(
+            step, h, (params["layers"], caches["ssm"], caches["conv"]),
+            num_stages=num_stages, boundary_fn=boundary_fn,
+            boundary_state=boundary_state,
+            get_h=lambda c: c, set_h=lambda c, hh: hh)
         new_caches["ssm"], new_caches["conv"] = nst, ncv
 
     elif fam == "hybrid":
@@ -532,15 +618,20 @@ def forward_with_caches(params: Params, cfg: ModelConfig, tokens, caches,
                 cfg.sliding_window or cache_len, ck, cv, pos0, block_k)
             return hh, (nst, ncv, nk, nv)
 
-        h, (nst, ncv, nk, nv) = jax.lax.scan(
+        h, (nst, ncv, nk, nv), boundary_state = _staged_cached_scan(
             block_step, h,
-            (blocks, sstates, cstates, caches["k"], caches["v"]))
+            (blocks, sstates, cstates, caches["k"], caches["v"]),
+            num_stages=num_stages, boundary_fn=boundary_fn,
+            boundary_state=boundary_state,
+            get_h=lambda c: c, set_h=lambda c, hh: hh)
         new_caches["ssm"] = nst.reshape(caches["ssm"].shape)
         new_caches["conv"] = ncv.reshape(caches["conv"].shape)
         new_caches["k"], new_caches["v"] = nk, nv
     else:
         raise ValueError(fam)
 
+    if hop_m is not None:
+        new_caches["hop_m"] = boundary_state["m"]
     if patches is not None:
         h = h[:, patches.shape[1]:]
     if logits_last_only:

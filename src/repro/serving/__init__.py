@@ -1,0 +1,17 @@
+"""Compressed serving plane: pjit decode + the paper's codecs at
+inference time.
+
+* `decode` — sharded prefill / single-token decode steps (pjit);
+* `delta` — AC-SGD-style delta codec for the inter-stage decode hop;
+* `kvcache` — quantized KV cache (the ``kv`` plane of CommConfig);
+* `batcher` — minimal continuous batching over paged cache slots.
+"""
+from repro.serving.batcher import ContinuousBatcher, ServeRequest
+from repro.serving.delta import DeltaHopCodec
+from repro.serving.kvcache import KVCodec, init_quant_caches, \
+    quantize_caches
+
+__all__ = [
+    "ContinuousBatcher", "ServeRequest", "DeltaHopCodec", "KVCodec",
+    "init_quant_caches", "quantize_caches",
+]

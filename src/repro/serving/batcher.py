@@ -1,0 +1,210 @@
+"""Minimal continuous batching over the compressed serving plane.
+
+One fixed pool of ``num_slots`` cache rows (the "pages" — each request
+owns exactly one row of every cache leaf for its lifetime) fed by a
+FIFO of requests.  The decode step is compiled ONCE for the static
+shape ``(num_slots, 1)`` and every iteration advances all slots
+together; admission and eviction are host-side slot bookkeeping, never
+a recompile.
+
+State machine (per request)::
+
+    PENDING --admit (free slot: B=1 exact-length prefill,
+            |        write row into the pool, emit first token)
+            v
+    ACTIVE --batched decode step each tick, one token per tick
+            |
+            +--EOS sampled, or max_new_tokens reached
+            v
+    DONE   (slot freed, next PENDING request admitted)
+
+Mixed lengths: each slot carries its own position in a ``(num_slots,)``
+``pos`` vector, and the pooled step `jax.vmap`s the model's single-row
+decode over it — rows at different depths attend over their own valid
+prefix only.  Prefill compiles per UNIQUE prompt length (B=1, exact
+length, no padding); serving a stream with many distinct lengths wants
+length bucketing on top, which is out of scope here.
+
+Compression hooks: a `serving.kvcache.KVCodec` swaps the pooled cache
+to the quantized layout, and a `serving.delta.DeltaHopCodec` +
+``num_stages`` routes every hidden-state hop between stage groups
+through the delta codec (reference buffers live in the pool as
+``hop_m`` and are evicted/re-prefilled with their slot).
+
+Decoding is greedy (argmax) — what the fp32-vs-quantized equivalence
+gate in tests/test_serving.py compares token-for-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as Mo
+from repro.serving.delta import DeltaHopCodec
+from repro.serving.kvcache import KVCodec, quantize_caches
+
+PENDING, ACTIVE, DONE = "PENDING", "ACTIVE", "DONE"
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One prompt in flight; ``tokens`` accumulates greedy output."""
+    prompt: list
+    max_new_tokens: int = 16
+    tokens: list = dataclasses.field(default_factory=list)
+    state: str = PENDING
+    slot: int = -1
+
+
+class ContinuousBatcher:
+    """Paged per-request cache slots + a single static-shape decode step.
+
+    ``kv_codec``/``hop_codec``/``num_stages`` default to the
+    uncompressed single-stage baseline; ``eos_id=None`` disables EOS
+    eviction (requests run to ``max_new_tokens``)."""
+
+    def __init__(self, params, cfg, *, num_slots: int, cache_len: int,
+                 kv_codec: Optional[KVCodec] = None,
+                 hop_codec: Optional[DeltaHopCodec] = None,
+                 num_stages: int = 1, block_k: int = 512,
+                 eos_id: Optional[int] = None, dtype=jnp.bfloat16):
+        self.params, self.cfg = params, cfg
+        self.num_slots, self.cache_len = num_slots, cache_len
+        self.kv_codec = kv_codec if (kv_codec and kv_codec.bits) else None
+        self.hop_codec = hop_codec
+        self.num_stages = num_stages
+        self.block_k, self.eos_id, self.dtype = block_k, eos_id, dtype
+        self.requests: list[ServeRequest] = []
+        self._slots: list[Optional[ServeRequest]] = [None] * num_slots
+        self._next_tok = np.zeros((num_slots,), np.int32)
+        self.caches = self._init_pool()
+        self._decode = self._build_decode()
+        self._prefill_cache = {}
+
+    # -- pool construction --------------------------------------------------
+
+    def _row_caches(self, batch: int):
+        caches = Mo.init_caches(self.cfg, batch, self.cache_len,
+                                self.dtype)
+        if self.kv_codec is not None:
+            caches = quantize_caches(self.cfg, caches, self.kv_codec)
+        if self.hop_codec is not None and self.num_stages > 1:
+            caches["hop_m"] = self.hop_codec.init_state(
+                self.num_stages - 1, batch, self.cfg.d_model)["m"]
+        return caches
+
+    def _init_pool(self):
+        pool = self._row_caches(self.num_slots)
+        # per-slot positions replace the scalar pos of a uniform batch
+        pool["pos"] = jnp.zeros((self.num_slots,), jnp.int32)
+        return pool
+
+    # -- compiled steps -----------------------------------------------------
+
+    def _build_decode(self):
+        cfg, block_k = self.cfg, self.block_k
+        kv_codec, num_stages = self.kv_codec, self.num_stages
+        bfn = (self.hop_codec.boundary_fn(prefill=False)
+               if self.hop_codec is not None and num_stages > 1 else None)
+
+        def row_step(params, row, token):
+            # re-expand the batch dim vmap stripped: leaf (L, S, ...)
+            # -> (L, 1, S, ...), pos stays the row's own scalar
+            caches = {k: (v if k == "pos" else v[:, None])
+                      for k, v in row.items()}
+            logits, nc = Mo.forward_with_caches(
+                params, cfg, token[None, None], caches, block_k=block_k,
+                logits_last_only=True, num_stages=num_stages,
+                boundary_fn=bfn, kv_codec=kv_codec)
+            nc = {k: (v if k == "pos" else v[:, 0])
+                  for k, v in nc.items()}
+            return jnp.argmax(logits[0, -1]).astype(jnp.int32), nc
+
+        axes = {k: (0 if k == "pos" else 1) for k in self.caches}
+        return jax.jit(jax.vmap(row_step, in_axes=(None, axes, 0),
+                                out_axes=(0, axes)))
+
+    def _prefill(self, prompt: np.ndarray):
+        """B=1 exact-length prefill; compiled per unique prompt length."""
+        fn = self._prefill_cache.get(len(prompt))
+        if fn is None:
+            cfg, block_k = self.cfg, self.block_k
+            kv_codec, num_stages = self.kv_codec, self.num_stages
+            bfn = (self.hop_codec.boundary_fn(prefill=True)
+                   if self.hop_codec is not None and num_stages > 1
+                   else None)
+
+            def fill(params, caches, tokens):
+                logits, nc = Mo.forward_with_caches(
+                    params, cfg, tokens, caches, block_k=block_k,
+                    logits_last_only=True, num_stages=num_stages,
+                    boundary_fn=bfn, kv_codec=kv_codec)
+                return jnp.argmax(logits[0, -1]).astype(jnp.int32), nc
+
+            fn = self._prefill_cache[len(prompt)] = jax.jit(fill)
+        caches = self._row_caches(1)
+        return fn(self.params, caches, jnp.asarray(prompt)[None, :])
+
+    # -- slot bookkeeping ---------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16) -> ServeRequest:
+        req = ServeRequest(list(prompt), max_new_tokens)
+        self.requests.append(req)
+        return req
+
+    def _write_slot(self, i: int, row_caches):
+        for name, leaf in row_caches.items():
+            if name == "pos":
+                self.caches["pos"] = self.caches["pos"].at[i].set(leaf)
+            else:
+                self.caches[name] = \
+                    self.caches[name].at[:, i].set(leaf[:, 0])
+
+    def _admit(self):
+        pending = [r for r in self.requests if r.state == PENDING]
+        for i, slot in enumerate(self._slots):
+            if slot is not None or not pending:
+                continue
+            req = pending.pop(0)
+            tok, row = self._prefill(np.asarray(req.prompt, np.int32))
+            self._write_slot(i, row)
+            req.state, req.slot = ACTIVE, i
+            self._slots[i] = req
+            self._emit(req, int(tok))
+            self._next_tok[i] = int(tok)
+
+    def _emit(self, req: ServeRequest, tok: int):
+        req.tokens.append(tok)
+        done = (self.eos_id is not None and tok == self.eos_id) \
+            or len(req.tokens) >= req.max_new_tokens
+        if done:
+            req.state = DONE
+            self._slots[req.slot] = None
+            req.slot = -1
+
+    # -- drive --------------------------------------------------------------
+
+    def step(self):
+        """One batched decode tick over every slot (idle rows advance on
+        garbage and are ignored — the price of a static shape)."""
+        toks, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self._next_tok))
+        toks = np.asarray(toks)
+        for i, req in enumerate(self._slots):
+            self._next_tok[i] = int(toks[i])
+            if req is not None:
+                self._emit(req, int(toks[i]))
+
+    def run(self, max_ticks: int = 10_000) -> list:
+        """Admit + decode until every submitted request is DONE; returns
+        the requests in submission order."""
+        for _ in range(max_ticks):
+            self._admit()
+            if all(r.state == DONE for r in self.requests):
+                break
+            self.step()
+        return self.requests

@@ -49,19 +49,32 @@ def leaf_spec(mesh, shape, *, skip_leading: int = 0) -> P:
     return P(*spec)
 
 
+# params subtrees whose leaves carry a leading layer-stack dim that must
+# never be sharded (it is scanned over, not a tensor dim)
+STACKED_KEYS = ("layers", "enc_layers")
+
+
 def param_shardings(cfg: ModelConfig, mesh, params_shape) -> Any:
-    """Shardings for a params pytree (ShapeDtypeStructs or arrays)."""
-    def rule(leaf):
-        # stacked layer leaves have a leading layer dim; detect by ndim>=2
-        # and first-dim == num_layers-ish — simpler: never shard dim 0 of
-        # 3D+ leaves (it is the stack dim), shard last two dims.
-        skip = 1 if leaf.ndim >= 3 else 0
+    """Shardings for a params pytree (ShapeDtypeStructs or arrays).
+
+    Stackedness is read off the tree STRUCTURE (top-level key in
+    `STACKED_KEYS`), not guessed from rank: the old ``ndim >= 3``
+    heuristic data-sharded dim 0 of stacked 2-D leaves — e.g. a
+    whisper/pixtral per-layer norm stack ``(L, d)`` got its LAYER dim
+    split over data whenever ``L % dsize == 0``, which is wrong for the
+    scan carrying it."""
+    def rule(path, leaf):
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        skip = 1 if top in STACKED_KEYS else 0
         return NamedSharding(mesh, leaf_spec(mesh, leaf.shape,
                                              skip_leading=skip))
-    return jax.tree.map(rule, params_shape)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
 
 
 def cache_shardings(cfg: ModelConfig, mesh, cache_shape) -> Any:
+    """Name-keyed cache rules: batch over data axes, sequence/heads
+    over model; quantized ``{k,v}_codes``/``{k,v}_scale`` stores and
+    the delta-hop ``hop_m`` buffers follow the raw leaves' layout."""
     daxes = data_axes(mesh)
     dsize = _axis_sizes(mesh, daxes)
     msize = mesh.shape["model"]
@@ -72,9 +85,11 @@ def cache_shardings(cfg: ModelConfig, mesh, cache_shape) -> Any:
         if name == "pos":
             return NamedSharding(mesh, P())
         shape = leaf.shape
-        if name in ("k", "v", "pk", "pv", "xk", "xv"):
-            # (L, B, S, Hk, hd)
-            spec = [None] * 5
+        if name in ("k", "v", "pk", "pv", "xk", "xv",
+                    "k_codes", "v_codes", "k_scale", "v_scale"):
+            # raw (L, B, S, Hk, hd); quantized codes (L, B, S, Hk, G, pw)
+            # and scales (L, B, S, Hk, G) share the batch/seq layout
+            spec = [None] * len(shape)
             if shape[1] % dsize == 0:
                 spec[1] = d
                 spec[2] = "model" if shape[2] % msize == 0 else None
@@ -82,6 +97,12 @@ def cache_shardings(cfg: ModelConfig, mesh, cache_shape) -> Any:
                 spec[2] = (*daxes, "model")
             elif shape[2] % msize == 0:
                 spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if name == "hop_m":
+            # delta-hop references (nb, B, 1, d): batch over data
+            spec = [None] * 4
+            if shape[1] % dsize == 0:
+                spec[1] = d
             return NamedSharding(mesh, P(*spec))
         if name == "ssm":
             spec = [None] * 5
@@ -125,6 +146,7 @@ def serve_step(params, caches, tokens, *, cfg: ModelConfig,
 
 def prefill_step(params, caches, tokens, *, cfg: ModelConfig,
                  patches=None, frames=None, block_k: int = 512):
+    """Prompt pass: (B, S) tokens -> (B, S, V) logits + filled caches."""
     logits, new_caches = Mo.forward_with_caches(
         params, cfg, tokens, caches, patches=patches, frames=frames,
         block_k=block_k)
@@ -132,6 +154,7 @@ def prefill_step(params, caches, tokens, *, cfg: ModelConfig,
 
 
 def logits_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
+    """Vocab-sharded logits when the model axis divides the vocab."""
     spec = P(None, None, "model") \
         if cfg.vocab_size % mesh.shape["model"] == 0 else P()
     return NamedSharding(mesh, spec)
@@ -139,6 +162,8 @@ def logits_sharding(cfg: ModelConfig, mesh) -> NamedSharding:
 
 def jit_serve_step(cfg: ModelConfig, mesh, params_shape, cache_shape,
                    token_shape, donate: bool = True):
+    """jit `serve_step` with the full in/out sharding rule set (caches
+    donated by default — decode rewrites them in place)."""
     ps = param_shardings(cfg, mesh, params_shape)
     cs = cache_shardings(cfg, mesh, cache_shape)
     ts = batch_sharding(mesh, token_shape.shape)

@@ -1,0 +1,120 @@
+"""Delta-encoded pipeline hops for autoregressive decode.
+
+The paper's core trick — quantize the CHANGE in an activation against a
+reference buffer instead of the value (AC-SGD / AQ-SGD) — applied to
+the serving plane: during decode, consecutive tokens' hidden states at
+a pipeline boundary drift slowly, so the inter-stage hop ships
+``Q(h_t - m)`` against a per-boundary reference ``m`` and both sides
+advance ``m += dequant(codes)`` in lockstep, exactly Algorithm 2's
+sender/receiver discipline with the per-sample message buffer replaced
+by a per-(boundary, batch-row) reference.
+
+Modes mirror the training activation plane (`CommConfig.mode`):
+
+* ``aqsgd``   — delta codec: `core.boundary.encode_delta` on the send
+  side, `decode_accumulate` on the receive side (bit-identical m / h'
+  by the boundary-parity contract, so the simulated single-process hop
+  below is bit-faithful to a real two-machine ppermute crossing);
+* ``directq`` — quantize the value itself every hop (`roundtrip`);
+* ``fp32``    — pass-through (the uncompressed baseline).
+
+Warmup: the PREFILL pass always crosses uncompressed and initializes
+``m`` from the last prompt position's hidden state — the serving
+analogue of the paper's uncompressed first epoch, giving the delta
+codec a reference that is already one token-step close.
+
+The wire claim is the registered fw-activation ``ppermute`` wire's
+``wire_bytes`` model over the ``(B, 1, d)`` decode hop — pinned
+against compiled ppermute collective bytes in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import wires as W
+from repro.core import boundary as B
+
+
+@dataclass(frozen=True)
+class DeltaHopCodec:
+    """Decode-hop codec for one pipeline mesh: mode + fw-plane knobs.
+
+    ``num_boundaries = num_stages - 1`` reference buffers of shape
+    ``(B, 1, d)`` — one per inter-stage hop, advanced once per decoded
+    token.  Deterministic rounding by default: both ends of a real wire
+    must reconstruct identical references without sharing PRNG keys."""
+    mode: str = "aqsgd"                 # aqsgd | directq | fp32
+    bits: int = 4
+    stochastic: bool = False
+    backend: str = "auto"
+
+    def __post_init__(self):
+        assert self.mode in ("aqsgd", "directq", "fp32"), self.mode
+
+    @classmethod
+    def from_comm(cls, comm) -> "DeltaHopCodec":
+        """Bind `repro.comm.CommConfig`'s mode + fw plane.  Rounding is
+        forced deterministic regardless of ``fw.stochastic``: the train
+        plane dithers for unbiased gradients, but a decode hop's two
+        ends must advance bit-identical references keylessly."""
+        return cls(mode=comm.mode, bits=comm.fw.bits or 4,
+                   stochastic=False, backend=comm.fw.backend)
+
+    def init_state(self, num_boundaries: int, batch: int, d: int) -> dict:
+        """Zero reference buffers (filled by the prefill crossing)."""
+        return {"m": jnp.zeros((max(num_boundaries, 1), batch, 1, d),
+                               jnp.float32)}
+
+    def prefill_boundary(self, state, h, idx):
+        """Prefill crossing: uncompressed pass-through; the reference
+        becomes the LAST prompt position's hidden state (the value the
+        first decode-step delta is measured against)."""
+        if self.mode == "fp32":
+            return state, h
+        m = state["m"].at[idx].set(
+            h[:, -1:, :].astype(jnp.float32))
+        return {"m": m}, h
+
+    def decode_boundary(self, state, h, idx, *, key=None):
+        """One decode-token crossing of boundary ``idx``; h (B, 1, d).
+
+        aqsgd: the receiver's ``decode_accumulate`` output IS the new
+        reference (bit-identical to the sender's ``m_new`` by the
+        parity contract), so one state update serves both ends."""
+        if self.mode == "fp32":
+            return state, h
+        if self.mode == "directq":
+            return state, B.roundtrip(
+                h, bits=self.bits, stochastic=self.stochastic, key=key,
+                backend=self.backend).astype(h.dtype)
+        m = state["m"][idx]
+        packed, scale, m_new = B.encode_delta(
+            h, m, bits=self.bits, stochastic=self.stochastic, key=key,
+            backend=self.backend)
+        h2 = B.decode_accumulate(packed, scale, m, bits=self.bits,
+                                 backend=self.backend)
+        return ({"m": state["m"].at[idx].set(m_new)},
+                h2.astype(h.dtype))
+
+    def boundary_fn(self, *, prefill: bool, key=None):
+        """The ``boundary_fn(state, h, idx) -> (state, h)`` hook
+        `models.model.forward_with_caches` runs between stage groups."""
+        if prefill:
+            return self.prefill_boundary
+
+        def fn(state, h, idx):
+            k = jax.random.fold_in(key, idx) if key is not None else None
+            return self.decode_boundary(state, h, idx, key=k)
+        return fn
+
+    def hop_bytes(self, batch: int, d: int) -> int:
+        """Modeled network bytes for ONE decode-token hop across one
+        boundary — the registered fw-plane ``ppermute`` wire's uniform
+        byte model (raw f32 for the fp32 pass-through)."""
+        spec = W.get_wire("ppermute", plane="fw-activation")
+        if self.mode == "fp32":
+            return batch * d * 4
+        return spec.wire_bytes((batch, 1, d), self.bits, 1)

@@ -1,0 +1,173 @@
+"""Quantized KV cache: quantize-on-append, dequantize-on-attend.
+
+The serving analogue of the z-buffer plane: the decode-time KV cache is
+stored as packed b-bit codes plus one f32 scale per quantization group,
+cutting HBM residency ~``32/bits``x for long contexts.  The codec knobs
+live on the ``kv`` plane of `repro.comm.CommConfig` (``kv.bits``,
+``kv.group_d``, ``kv.stochastic``) and the byte claim is the registered
+``paged`` wire's ``wire_bytes`` model (`repro.comm.wires`), pinned
+against the compiled append op's output buffers by tests/test_hlo_cost.py.
+
+Layout.  A raw layer cache row is ``(B, S, Hk, head_dim)``.  The codec
+reshapes ``head_dim`` into ``(G, group)`` scale groups (``group =
+kv.group_d or head_dim`` — the default is one scale per head row) and
+stores
+
+* ``codes``  u8  ``(L, B, S, Hk, G, packed_width(group, bits))``
+* ``scale``  f32 ``(L, B, S, Hk, G)``
+
+Append discipline: each `forward_with_caches` step dequantizes the
+whole layer cache (one fused pass per layer inside the scan), lets
+attention scatter the step's FRESH raw rows in, attends, then encodes
+ONLY those fresh rows back into the code store.  Old tokens are encoded
+exactly once — re-quantization error never accumulates — which is what
+makes the greedy-equivalence gate (fp32 vs 8-bit cache, identical
+argmax tokens; tests/test_serving.py) a fair fight.
+
+All quantization goes through the backend-selectable boundary ops
+(`core.boundary.encode`/`decode`), so the ``reference|pallas|auto``
+bit-parity contract of the training wires applies verbatim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import boundary as B
+from repro.core import quantization as Q
+
+
+@dataclass(frozen=True)
+class KVCodec:
+    """The kv plane's codec: bits/group/stochastic/backend bound once.
+
+    ``bits=0`` disables quantization (raw dtype cache, the seed
+    behaviour).  ``group_d=0`` means one scale group per head row
+    (group = head_dim).  Rounding is deterministic by default — decode
+    must be reproducible across replays of the same request."""
+    bits: int = 0
+    group_d: int = 0
+    stochastic: bool = False
+    backend: str = "auto"
+
+    @classmethod
+    def from_comm(cls, comm) -> "KVCodec":
+        """Bind the ``kv`` plane of a `repro.comm.CommConfig`."""
+        pc = comm.kv
+        return cls(bits=pc.bits, group_d=pc.group_d,
+                   stochastic=pc.stochastic, backend=pc.backend)
+
+    def group(self, head_dim: int) -> int:
+        """Scale-group width along head_dim."""
+        g = self.group_d or head_dim
+        assert head_dim % g == 0, (head_dim, g)
+        if self.bits in B.PACKABLE_BITS:
+            # byte-aligned packing must round-trip without padding so
+            # the decode side can recover g from the packed width
+            assert g % Q.codes_per_byte(self.bits) == 0, (g, self.bits)
+        return g
+
+    def grouped_shape(self, shape) -> tuple:
+        """(..., head_dim) value shape -> (..., G, group) grouped shape
+        (what the registered ``paged`` wire's byte model consumes)."""
+        *lead, hd = shape
+        g = self.group(hd)
+        return (*lead, hd // g, g)
+
+    def stored_bytes(self, shape) -> int:
+        """Modeled HBM bytes for one append of value shape
+        ``(..., head_dim)`` — delegates to the grouped `Q.wire_bytes`
+        form the registry pins (raw f32 when bits=0)."""
+        if not self.bits:
+            return int(np.prod(shape)) * 4
+        return Q.wire_bytes(self.grouped_shape(shape), self.bits)
+
+    # -- cache structure ---------------------------------------------------
+
+    def empty(self, shape, dtype=jnp.bfloat16):
+        """Zero cache store for a raw value shape ``(..., head_dim)``:
+        ``{"codes", "scale"}`` when quantized, a raw zeros array when
+        bits=0.  Zero codes + zero scales decode to exact zeros, so an
+        empty quantized cache attends identically to an empty raw one."""
+        if not self.bits:
+            return jnp.zeros(shape, dtype)
+        *lead, hd = shape
+        g = self.group(hd)
+        pw = Q.packed_width(g, self.bits)
+        return {"codes": jnp.zeros((*lead, hd // g, pw), jnp.uint8),
+                "scale": jnp.zeros((*lead, hd // g), jnp.float32)}
+
+    def encode(self, values, *, key=None):
+        """Quantize fresh rows ``(..., head_dim)`` -> (codes, scale)
+        in the grouped store layout."""
+        g = self.group(values.shape[-1])
+        grouped = values.reshape(*values.shape[:-1], -1, g)
+        packed, scale = B.encode(grouped, bits=self.bits,
+                                 stochastic=self.stochastic, key=key,
+                                 backend=self.backend)
+        return packed, scale[..., 0]
+
+    def decode(self, codes, scale, dtype=jnp.bfloat16):
+        """Whole-store dequantize: (codes (..., G, pw), scale (..., G))
+        -> values (..., head_dim) in the attend dtype."""
+        g = self._group_of(codes.shape[-1])
+        vals = B.decode(codes, scale[..., None], bits=self.bits,
+                        d=g, dtype=dtype, backend=self.backend)
+        return vals.reshape(*codes.shape[:-2], -1)
+
+    def _group_of(self, pw: int) -> int:
+        """Recover the group width from a code store's packed width
+        (exact: `group` requires byte-aligned packing, so pw carries no
+        padding)."""
+        if self.group_d:
+            return self.group_d
+        if self.bits in B.PACKABLE_BITS:
+            return pw * Q.codes_per_byte(self.bits)
+        return pw                  # non-byte-aligned widths ship raw u8
+
+    def append(self, store, values, pos, *, key=None):
+        """Encode ``values (B, s, Hk, head_dim)`` and write them at
+        sequence position ``pos`` (traced int32) of a layer store —
+        the quantize-on-append op the HLO regression compiles."""
+        codes, scale = self.encode(values, key=key)
+        return {
+            "codes": jax.lax.dynamic_update_slice_in_dim(
+                store["codes"], codes, pos, axis=1),
+            "scale": jax.lax.dynamic_update_slice_in_dim(
+                store["scale"], scale, pos, axis=1),
+        }
+
+
+def quantize_caches(cfg, caches: dict, codec: KVCodec) -> dict:
+    """Convert a raw `models.model.init_caches` dict into the quantized
+    layout: the scanned ``k``/``v`` stores become ``{k,v}_codes`` +
+    ``{k,v}_scale``.  Prefix-layer caches (``pk``/``pv``, DeepSeek's
+    leading dense layers), audio cross-attention caches, and SSM state
+    stay raw — they are O(first_dense_layers) or position-independent
+    and outside the long-context growth term this plane compresses."""
+    if not codec.bits:
+        return caches
+    if cfg.family == "hybrid":
+        raise NotImplementedError(
+            "kv.bits > 0 is not wired for the hybrid family's shared "
+            "attention block yet — set kv.bits=0 for zamba2")
+    out = dict(caches)
+    for name in ("k", "v"):
+        if name not in out:
+            return caches                      # ssm: nothing to quantize
+        arr = out.pop(name)
+        store = codec.empty(arr.shape)
+        out[name + "_codes"] = store["codes"]
+        out[name + "_scale"] = store["scale"]
+    return out
+
+
+def init_quant_caches(cfg, batch_size: int, cache_len: int,
+                      codec: KVCodec, dtype=jnp.bfloat16) -> dict:
+    """`models.model.init_caches` followed by `quantize_caches`."""
+    from repro.models import model as Mo
+    return quantize_caches(
+        cfg, Mo.init_caches(cfg, batch_size, cache_len, dtype), codec)

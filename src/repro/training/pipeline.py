@@ -20,7 +20,7 @@ payloads — the compression shows up in the §Roofline collective term.
 
 All communication knobs live in ``PipelineConfig.comm``
 (`repro.comm.CommConfig`: fw / bw / z-buffer / dp planes; the old flat
-kwargs remain as deprecation shims), and the DP collective is resolved
+kwargs now raise with a migration message), and the DP collective is resolved
 by name from the wire registry (`repro.comm.wires`), so a newly
 registered wire reaches this trainer with no changes here.
 
@@ -82,7 +82,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm import wires as CW
-from repro.comm.config import CommConfig, resolve_legacy_comm
+from repro.comm.config import CommConfig, reject_legacy_comm
 from repro.configs.base import ModelConfig
 from repro.core import boundary as B
 from repro.core import collectives as C
@@ -97,34 +97,19 @@ from repro.models import ssm as S
 from repro.optim import adamw
 
 
-def _comm_mirrors(comm: CommConfig) -> dict:
-    """The deprecated flat-field views of a `CommConfig` (what the
-    legacy ``PipelineConfig(...)`` kwargs normalize into, and what the
-    mirror attributes are backfilled from so old readers keep
-    working)."""
-    return {"compression": comm.activation,
-            "buffer_bits": comm.zbuf.bits,
-            "dp_grad_bits": comm.dp.bits,
-            "dp_grad_group": comm.dp_group_d,
-            "dp_wire": comm.dp.wire}
-
-
 @dataclass(frozen=True)
 class PipelineConfig:
     """Pipeline-trainer knobs.  All communication lives in ``comm``
     (`repro.comm.CommConfig`: fw / bw / z-buffer / dp planes, wire
-    names from the registry); the trailing init-only parameters are
-    DEPRECATED construction shims — old kwargs (``compression=...``,
-    ``buffer_bits=...``, ``dp_grad_bits=...``, ``dp_grad_group=...``,
-    ``dp_wire=...``) still work for one release and normalize into
-    ``comm``.  The same names remain readable as PROPERTIES derived
-    from ``comm`` (so old reader code keeps working).  Mixing an
-    explicit ``comm`` with a conflicting legacy value raises — and
-    because ``dataclasses.replace`` re-passes the mirror values, that
-    includes ``replace(cfg, dp_wire=...)`` AND ``replace(cfg,
-    comm=new)``; swap comm on an existing config with
-    ``cfg.with_comm(new)`` (plain ``replace`` on the non-deprecated
-    fields works as usual)."""
+    names from the registry); ``comm=None`` means the default
+    `CommConfig()`.  The trailing init-only parameters are the REMOVED
+    pre-registry kwargs (``compression=...``, ``buffer_bits=...``,
+    ``dp_grad_bits=...``, ``dp_grad_group=...``, ``dp_wire=...``) —
+    kept only so passing one raises a loud migration error pointing at
+    ``comm=`` instead of an opaque TypeError.  Read the old values off
+    ``comm`` directly (``cfg.comm.dp.bits``, ``cfg.comm.activation``,
+    ...); ``dataclasses.replace(cfg, comm=new)`` and ``with_comm``
+    both swap comm."""
     microbatches: int = 16
     comm: Optional[CommConfig] = None
     warmup: bool = False            # warm-up epoch: uncompressed, fills m
@@ -135,54 +120,28 @@ class PipelineConfig:
     moe_mode: str = "zero3"         # zero3 | expert_parallel (§Perf)
     remat_mode: str = "nested"      # nested | layer (§Perf: nested saves
                                     # HBM, layer saves one fwd recompute)
-    # ---- DEPRECATED init-only shims (use comm=CommConfig(...)) ----------
+    # ---- REMOVED kwargs: raise with a migration message -----------------
     compression: InitVar[Optional[CompressionConfig]] = None
-    buffer_bits: InitVar[Optional[int]] = None       # -> comm.zbuf.bits
-    dp_grad_bits: InitVar[Optional[int]] = None      # -> comm.dp.bits
-    dp_grad_group: InitVar[Optional[int]] = None     # -> comm.dp.group_d
-    dp_wire: InitVar[Optional[str]] = None           # -> comm.dp.wire
+    buffer_bits: InitVar[Optional[int]] = None
+    dp_grad_bits: InitVar[Optional[int]] = None
+    dp_grad_group: InitVar[Optional[int]] = None
+    dp_wire: InitVar[Optional[str]] = None
 
     def __post_init__(self, compression, buffer_bits, dp_grad_bits,
                       dp_grad_group, dp_wire):
-        legacy = {"compression": compression,
-                  "buffer_bits": buffer_bits,
-                  "dp_grad_bits": dp_grad_bits,
-                  "dp_grad_group": dp_grad_group,
-                  "dp_wire": dp_wire}
-
-        def build():
-            cc = compression if compression is not None \
-                else CompressionConfig()
-            return CommConfig.from_legacy(
-                cc, buffer_bits=buffer_bits,
-                dp_grad_bits=dp_grad_bits or 0,
-                dp_wire=dp_wire or "",
-                dp_grad_group=dp_grad_group or 0)
-
-        comm = resolve_legacy_comm(
-            "PipelineConfig", self.comm, legacy,
-            _comm_mirrors(self.comm) if self.comm is not None else {},
-            build)
-        object.__setattr__(self, "comm", comm)
+        reject_legacy_comm(
+            "PipelineConfig",
+            {"compression": compression, "buffer_bits": buffer_bits,
+             "dp_grad_bits": dp_grad_bits,
+             "dp_grad_group": dp_grad_group, "dp_wire": dp_wire})
+        if self.comm is None:
+            object.__setattr__(self, "comm", CommConfig())
 
     def with_comm(self, comm: CommConfig) -> "PipelineConfig":
-        """Copy of this config with ``comm`` swapped — the supported
-        path, since ``dataclasses.replace`` re-passes the deprecated
-        mirror kwargs of the OLD comm and would raise a conflict."""
-        kw = {f.name: getattr(self, f.name)
-              for f in dataclasses.fields(self)}   # excludes InitVars
-        kw["comm"] = comm
-        return type(self)(**kw)
-
-
-# the deprecated names stay READABLE as comm-derived properties (the
-# InitVar class attributes are replaced after class creation, so the
-# constructor kwargs and the reader properties share one name)
-for _name in ("compression", "buffer_bits", "dp_grad_bits",
-              "dp_grad_group", "dp_wire"):
-    setattr(PipelineConfig, _name,
-            property(lambda self, _n=_name: _comm_mirrors(self.comm)[_n]))
-del _name
+        """Copy of this config with ``comm`` swapped (equivalent to
+        ``dataclasses.replace(self, comm=comm)``; kept because it
+        predates the removal of the legacy mirror kwargs)."""
+        return dataclasses.replace(self, comm=comm)
 
 
 # ---------------------------------------------------------------------------

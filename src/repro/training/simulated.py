@@ -19,8 +19,8 @@ results measured here transfer across backends up to the usual
 compiler-fusion ulp noise in the surrounding model compute.
 
 All communication knobs live in ``SimTrainConfig.comm``
-(`repro.comm.CommConfig`; old flat kwargs remain as deprecation
-shims), and the DP wire is simulated by its registered
+(`repro.comm.CommConfig`; the pre-registry flat kwargs now raise with
+a migration message), and the DP wire is simulated by its registered
 `WireSpec.sim_allreduce` from the wire registry.
 
 DP gradient compression (Fig. 5, ``comm.dp.bits > 0``) uses the bucketed
@@ -53,7 +53,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.comm.config import CommConfig, resolve_legacy_comm
+from repro.comm.config import CommConfig, reject_legacy_comm
 from repro.configs.base import ModelConfig
 from repro.core import aqsgd
 from repro.core import grad_compress
@@ -68,73 +68,38 @@ class SimTrainConfig:
     (`repro.comm.CommConfig`); the DP plane's wire is simulated by its
     registered `WireSpec.sim_allreduce` (bit-faithful to the shard_map
     collective for the codec wires, math-faithful for passthroughs
-    like ``fp16``).  The trailing init-only parameters are DEPRECATED
-    construction shims — old kwargs (``compression=...``,
-    ``dp_grad_bits=...``, ``dp_grad_group=...``, ``dp_sharded=...``)
-    keep working for one release and normalize into ``comm``
-    (``dp_sharded=True`` maps to the ``ring-sharded`` wire).  The same
-    names remain readable as comm-derived properties; conflicting
-    comm + legacy values raise, and — since ``dataclasses.replace``
-    re-passes the mirrors — swapping comm goes through
-    ``cfg.with_comm(new)`` (see `PipelineConfig`)."""
+    like ``fp16``).  The trailing init-only parameters are the REMOVED
+    pre-registry kwargs (``compression=...``, ``dp_grad_bits=...``,
+    ``dp_grad_group=...``, ``dp_sharded=...``) — kept only so passing
+    one raises a loud migration error pointing at ``comm=``.  Read the
+    old values off ``comm`` directly (``cfg.comm.dp.bits``,
+    ``cfg.comm.activation``, ``cfg.comm.dp_wire_spec.sharded``, ...)."""
     num_stages: int = 4
     comm: Optional[CommConfig] = None
     optimizer: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
     dp_workers: int = 1             # simulated DP degree when dp bits > 0
     remat: bool = False
-    # ---- DEPRECATED init-only shims (use comm=CommConfig(...)) ----------
+    # ---- REMOVED kwargs: raise with a migration message -----------------
     compression: InitVar[Optional[CompressionConfig]] = None
-    dp_grad_bits: InitVar[Optional[int]] = None      # -> comm.dp.bits
-    dp_grad_group: InitVar[Optional[int]] = None     # -> comm.dp.group_d
-    dp_sharded: InitVar[Optional[bool]] = None       # -> comm.dp.wire
+    dp_grad_bits: InitVar[Optional[int]] = None
+    dp_grad_group: InitVar[Optional[int]] = None
+    dp_sharded: InitVar[Optional[bool]] = None
 
     def __post_init__(self, compression, dp_grad_bits, dp_grad_group,
                       dp_sharded):
-        legacy = {"compression": compression,
-                  "dp_grad_bits": dp_grad_bits,
-                  "dp_grad_group": dp_grad_group,
-                  "dp_sharded": dp_sharded}
-
-        def build():
-            cc = compression if compression is not None \
-                else CompressionConfig()
-            return CommConfig.from_legacy(
-                cc, dp_grad_bits=dp_grad_bits or 0,
-                dp_wire="ring-sharded" if dp_sharded else "",
-                dp_grad_group=dp_grad_group or 0)
-
-        comm = resolve_legacy_comm(
-            "SimTrainConfig", self.comm, legacy,
-            self._mirrors(self.comm) if self.comm is not None else {},
-            build)
-        object.__setattr__(self, "comm", comm)
+        reject_legacy_comm(
+            "SimTrainConfig",
+            {"compression": compression, "dp_grad_bits": dp_grad_bits,
+             "dp_grad_group": dp_grad_group, "dp_sharded": dp_sharded})
+        if self.comm is None:
+            object.__setattr__(self, "comm", CommConfig())
 
     def with_comm(self, comm: CommConfig) -> "SimTrainConfig":
-        """Copy with ``comm`` swapped (`dataclasses.replace` re-passes
-        the deprecated mirror kwargs; this is the supported path)."""
+        """Copy with ``comm`` swapped (equivalent to
+        ``dataclasses.replace``; kept because it predates the removal
+        of the legacy mirror kwargs)."""
         import dataclasses as _dc
-        kw = {f.name: getattr(self, f.name)
-              for f in _dc.fields(self)}           # excludes InitVars
-        kw["comm"] = comm
-        return type(self)(**kw)
-
-    @staticmethod
-    def _mirrors(comm: CommConfig) -> dict:
-        return {"compression": comm.activation,
-                "dp_grad_bits": comm.dp.bits,
-                "dp_grad_group": comm.dp_group_d,
-                "dp_sharded": comm.dp_wire_spec.sharded}
-
-
-# deprecated names stay readable as comm-derived properties (the
-# InitVar class attributes are replaced post-class, so constructor
-# kwargs and reader properties share one name)
-for _name in ("compression", "dp_grad_bits", "dp_grad_group",
-              "dp_sharded"):
-    setattr(SimTrainConfig, _name,
-            property(lambda self, _n=_name:
-                     SimTrainConfig._mirrors(self.comm)[_n]))
-del _name
+        return _dc.replace(self, comm=comm)
 
 
 def init_train_state(mcfg: ModelConfig, tcfg: SimTrainConfig,

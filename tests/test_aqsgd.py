@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.comm import CommConfig
 from repro.configs.base import get_config
 from repro.core import aqsgd
 from repro.core import quantization as Q
@@ -139,12 +140,13 @@ def _mini_setup(mode, fw_bits=2, bw_bits=4, steps=30, stages=4, lr=2e-3,
     ds = Dataset(dc)
     tcfg = sim.SimTrainConfig(
         num_stages=stages,
-        compression=CompressionConfig(mode=mode, fw_bits=fw_bits,
-                                      bw_bits=bw_bits,
-                                      buffer_bits=buffer_bits),
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode=mode, fw_bits=fw_bits,
+                              bw_bits=bw_bits, buffer_bits=buffer_bits),
+            dp_grad_bits=dp_grad_bits),
         optimizer=AdamWConfig(lr=lr, warmup_steps=5, total_steps=steps,
                               schedule="constant"),
-        dp_grad_bits=dp_grad_bits, dp_workers=dp_workers)
+        dp_workers=dp_workers)
     state, losses = sim.train(mcfg, tcfg, ds, num_steps=steps, batch_size=8,
                               key=jax.random.PRNGKey(0),
                               initial_params=initial_params)

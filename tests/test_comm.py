@@ -1,7 +1,8 @@
 """`repro.comm` contract tests: CommConfig serialization round-trips,
 registry rejection/did-you-mean, registry completeness (every DP wire
-carries a byte model the HLO regression exercises), and the
-deprecation shims on PipelineConfig / SimTrainConfig."""
+carries a byte model the HLO regression exercises), and the removed
+legacy kwargs on PipelineConfig / SimTrainConfig (they must raise a
+loud migration error, never silently accept or warn)."""
 import argparse
 import dataclasses
 import os
@@ -146,16 +147,23 @@ def test_registry_completeness_dp_byte_models():
 
 
 def test_activation_planes_registered():
-    """The registry covers all four planes (the unified accounting the
-    e2e CSV's plane column sources)."""
+    """The registry covers all five planes (the unified accounting the
+    e2e CSV's plane column and `--list-wires` source)."""
     assert wire_names("fw-activation") == ["ppermute"]
     assert wire_names("bw-gradient") == ["ppermute"]
     assert wire_names("z-buffer") == ["hbm"]
+    assert wire_names("kv-cache") == ["paged"]
     assert get_wire("hbm", plane="z-buffer").network is False
+    assert get_wire("paged", plane="kv-cache").network is False
     fw = get_wire("ppermute", plane="fw-activation")
     # boundary payload: packed codes + f32 row scales
     assert fw.wire_bytes((8, 64, 512), 4, 1) == \
         8 * 64 * (512 // 2) + 8 * 64 * 4
+    kv = get_wire("paged", plane="kv-cache")
+    # one grouped append: packed codes + f32 scale per group row;
+    # bits=0 falls back to the raw-f32 cache footprint
+    assert kv.wire_bytes((8, 1, 4, 64), 8, 1) == 8 * 4 * 64 + 8 * 4 * 4
+    assert kv.wire_bytes((8, 1, 4, 64), 0, 1) == 8 * 4 * 64 * 4
 
 
 # ---------------------------------------------------------------------------
@@ -193,44 +201,51 @@ def test_activation_view_matches_legacy_defaults():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# removed legacy kwargs
 # ---------------------------------------------------------------------------
 
-def test_pipeline_config_legacy_shims():
+def test_pipeline_config_legacy_kwargs_removed():
+    """The one-release deprecation shims are gone: passing any
+    pre-registry kwarg raises a loud error that names the kwarg and
+    points at comm= / from_legacy, and the mirror reader properties no
+    longer exist (reads go through comm)."""
     from repro.training import pipeline as PL
-    with pytest.warns(DeprecationWarning):
-        old = PL.PipelineConfig(dp_grad_bits=4, dp_wire="ring-sharded",
-                                buffer_bits=2)
+    with pytest.raises(TypeError, match=r"dp_wire=.*removed.*"
+                                        r"comm=CommConfig"):
+        PL.PipelineConfig(dp_grad_bits=4, dp_wire="ring-sharded",
+                          buffer_bits=2)
+    with pytest.raises(TypeError, match="compression=.*from_legacy"):
+        PL.PipelineConfig(compression=CompressionConfig(mode="fp32"))
     new = PL.PipelineConfig(comm=CommConfig(
         zbuf=PlaneConfig(bits=2), dp=PlaneConfig(bits=4,
                                                  wire="ring-sharded")))
-    assert old.comm == new.comm
-    # mirrors stay readable for old call sites
-    assert (old.dp_grad_bits, old.dp_wire, old.buffer_bits,
-            old.dp_grad_group) == (4, "ring-sharded", 2, 512)
-    assert old.compression.mode == "aqsgd"
-    with pytest.raises(ValueError, match="conflicts with comm"):
-        PL.PipelineConfig(comm=new.comm, dp_wire="psum")
-    # dataclasses.replace on non-deprecated fields keeps the mirrors
+    assert new.comm.dp.wire == "ring-sharded" and new.comm.zbuf.bits == 2
+    # no mirror properties survive — old readers must migrate to comm
+    # (the InitVar class attributes remain, but only as inert None
+    # defaults for the rejection gate, never comm-derived values)
+    for name in ("compression", "buffer_bits", "dp_grad_bits",
+                 "dp_grad_group", "dp_wire"):
+        assert not isinstance(getattr(type(new), name, None), property)
+        assert getattr(new, name, None) is None
+    # replace()/with_comm both swap comm cleanly now that the InitVar
+    # defaults are all None (nothing re-raises)
     rep = dataclasses.replace(new, warmup=True)
-    assert rep.dp_wire == "ring-sharded" and rep.warmup
-    # replace() re-passes the mirror kwargs, so BOTH changing a legacy
-    # field and swapping comm through it are loud errors (never a
-    # silent drop); with_comm is the supported swap path
-    with pytest.raises(ValueError, match="with_comm"):
-        dataclasses.replace(new, dp_wire="psum")
-    with pytest.raises(ValueError, match="with_comm"):
-        dataclasses.replace(
-            new, comm=CommConfig(dp=PlaneConfig(bits=4, wire="psum")))
+    assert rep.comm == new.comm and rep.warmup
     swapped = new.with_comm(
         CommConfig(dp=PlaneConfig(bits=4, wire="psum")))
-    assert swapped.dp_wire == "psum" and swapped.buffer_bits == 0
+    assert swapped.comm.dp.wire == "psum" and swapped.comm.zbuf.bits == 0
+    assert dataclasses.replace(
+        new, comm=swapped.comm).comm.dp.wire == "psum"
+    # the sanctioned migration path reproduces the old kwarg semantics
+    via_legacy = PL.PipelineConfig(comm=CommConfig.from_legacy(
+        None, dp_grad_bits=4, dp_wire="ring-sharded", buffer_bits=2))
+    assert via_legacy.comm == new.comm
 
 
-def test_sim_config_legacy_shims():
+def test_sim_config_legacy_kwargs_removed():
     from repro.training import simulated as sim
-    with pytest.warns(DeprecationWarning):
-        old = sim.SimTrainConfig(
+    with pytest.raises(TypeError, match="dp_sharded=.*removed"):
+        sim.SimTrainConfig(
             compression=CompressionConfig(mode="directq", fw_bits=2,
                                           bw_bits=4),
             dp_grad_bits=4, dp_workers=2, dp_sharded=True)
@@ -239,13 +254,21 @@ def test_sim_config_legacy_shims():
                         bw=PlaneConfig(bits=4),
                         dp=PlaneConfig(bits=4, wire="ring-sharded")),
         dp_workers=2)
-    assert old.comm == new.comm
-    assert old.dp_sharded is True and old.dp_grad_bits == 4
-    with pytest.raises(ValueError, match="conflicts with comm"):
-        sim.SimTrainConfig(comm=new.comm, dp_sharded=False)
+    assert new.comm.dp_wire_spec.sharded is True
+    for name in ("compression", "dp_grad_bits", "dp_grad_group",
+                 "dp_sharded"):
+        assert not isinstance(getattr(type(new), name, None), property)
+        assert getattr(new, name, None) is None
+    # from_legacy covers the dp_sharded flag via the wire name
+    via_legacy = sim.SimTrainConfig(
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode="directq", fw_bits=2, bw_bits=4),
+            dp_grad_bits=4, dp_wire="ring-sharded"),
+        dp_workers=2)
+    assert via_legacy.comm == new.comm
     swapped = new.with_comm(CommConfig(dp=PlaneConfig(bits=4)))
-    assert swapped.dp_sharded is False and swapped.dp_grad_bits == 4
-    assert swapped.dp_workers == 2
+    assert swapped.comm.dp_wire_spec.sharded is False
+    assert swapped.comm.dp.bits == 4 and swapped.dp_workers == 2
 
 
 def test_fp16_wire_sim_trains():

@@ -301,6 +301,7 @@ def test_sim_zero_sharded_training_parity():
     cross-program drift class of core/boundary.py, not codec or
     optimizer divergence: `apply_bucket_updates` is pinned elementwise
     bit-identical to `apply_updates` below)."""
+    from repro.comm import CommConfig
     from repro.configs.base import get_config
     from repro.core.aqsgd import CompressionConfig
     from repro.data.pipeline import Dataset, DatasetConfig
@@ -315,9 +316,11 @@ def test_sim_zero_sharded_training_parity():
     for sh in (False, True):
         tcfg = sim.SimTrainConfig(
             num_stages=2,
-            compression=CompressionConfig(mode="aqsgd", fw_bits=4,
-                                          bw_bits=8),
-            optimizer=opt, dp_grad_bits=4, dp_workers=2, dp_sharded=sh)
+            comm=CommConfig.from_legacy(
+                CompressionConfig(mode="aqsgd", fw_bits=4, bw_bits=8),
+                dp_grad_bits=4,
+                dp_wire="ring-sharded" if sh else ""),
+            optimizer=opt, dp_workers=2)
         _, losses = sim.train(cfg, tcfg, Dataset(dc), num_steps=4,
                               batch_size=4, key=jax.random.PRNGKey(0))
         out[sh] = losses
@@ -391,12 +394,15 @@ def test_dp_error_layout_matches_train_step(n_ranks, daxes):
     from repro.models import model as Mo
     from repro.training import pipeline as PL
 
+    from repro.comm import CommConfig
+
     cfg = get_config("gpt2-xl-paper", smoke=True).with_(num_layers=2)
-    pcfg = PL.PipelineConfig(dp_grad_bits=4, dp_wire="ring-sharded")
+    pcfg = PL.PipelineConfig(comm=CommConfig.from_legacy(
+        None, dp_grad_bits=4, dp_wire="ring-sharded"))
     params_shape = jax.eval_shape(
         lambda: PL.to_pipeline_params(
             cfg, Mo.init_params(cfg, jax.random.PRNGKey(0)), 2))
-    lay = GC.bucket_layout(params_shape, pcfg.dp_grad_group)
+    lay = GC.bucket_layout(params_shape, pcfg.comm.dp_group_d)
 
     err = jax.eval_shape(
         lambda: PL.init_dp_error(pcfg, params_shape, n_ranks))

@@ -176,3 +176,60 @@ def test_ring_wire_collective_bytes_regression():
             + sum_overhead + scale_bytes, (bits, row)
         # and the ring is a strict win over the i32 psum at every width
         assert row["ring"] < row["psum"], (bits, row)
+
+
+def test_serving_hop_wire_bytes_pinned():
+    """The delta decode hop — compiled as a real collective-permute
+    crossing (encode_delta -> ppermute codes+scales ->
+    decode_accumulate) — must ship EXACTLY the fw-activation ppermute
+    wire's modeled bytes over the (B, 1, d) decode shape, and stay
+    STRICTLY below the fp16 (and fp32) passthrough hop at every width:
+    the serving-plane acceptance gate."""
+    out = _wire_measurements()
+    hop = out["hop"]
+    for bits in (2, 4, 8):
+        row = hop[str(bits)]
+        assert row["measured"] == row["model"], (bits, row)
+        assert row["model"] < hop["fp16"] < hop["fp32"], (bits, hop)
+
+
+def test_serving_kv_bytes_pinned():
+    """The quantized KV append's compiled output buffers (codes + group
+    scales — the kv plane's HBM payload) must match the registered
+    ``paged`` wire's byte model EXACTLY, and undercut the raw-f32 cache
+    at every width.  Enrolment mirrors the DP wires: the worker derives
+    the model from the registry, so the kv plane cannot drift from its
+    pinned claim."""
+    import numpy as np
+    out = _wire_measurements()
+    kv = out["kv"]
+    raw = int(np.prod(kv["shape"])) * 4
+    for bits in (2, 4, 8):
+        row = kv[str(bits)]
+        assert row["measured"] == row["model"], (bits, row)
+        assert row["model"] < raw, (bits, row, raw)
+
+
+def test_every_plane_enrolled_in_byte_regression():
+    """Registry completeness: every plane in `repro.comm.wires.PLANES`
+    — kv-cache included — has at least one registered wire, and every
+    wire of every plane is covered by a byte measurement in THIS
+    module's worker output: dp-grad wires by name, the fw/bw ppermute
+    pair by the hop crossing, the z-buffer/kv-cache HBM wires by the
+    result-bytes compile.  A new plane cannot land unmeasured."""
+    from repro.comm import wires as W
+    out = _wire_measurements()
+    covered = {
+        "dp-grad": set(out["wires"]),
+        # the hop crossing compiles the ppermute codec both directions
+        "fw-activation": {"ppermute"} if "hop" in out else set(),
+        "bw-gradient": {"ppermute"} if "hop" in out else set(),
+        # HBM planes: z-buffer shares the codec model the hop pins; the
+        # kv append is measured directly
+        "z-buffer": {"hbm"} if "hop" in out else set(),
+        "kv-cache": {"paged"} if "kv" in out else set(),
+    }
+    for plane in W.PLANES:
+        names = set(W.wire_names(plane))
+        assert names, plane
+        assert names <= covered.get(plane, set()), (plane, names)

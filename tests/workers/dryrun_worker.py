@@ -10,6 +10,7 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro.comm.config import CommConfig
 from repro.configs.base import get_config, InputShape
 from repro.core.aqsgd import CompressionConfig
 from repro.launch import analysis
@@ -30,7 +31,8 @@ def main():
         if n_scan % 2:
             cfg = cfg.with_(num_layers=cfg.num_layers + 1)
         pcfg = PL.PipelineConfig(
-            microbatches=2, compression=CompressionConfig(mode="aqsgd"))
+            microbatches=2,
+            comm=CommConfig.from_legacy(CompressionConfig(mode="aqsgd")))
         step, meta = PL.make_train_step(
             cfg, pcfg, mesh, AdamWConfig(), global_batch=shape.global_batch,
             seq_len=shape.seq_len, buffer_samples=2)

@@ -13,6 +13,13 @@ cannot land without a pinned byte model (the completeness assertions
 live in tests/test_hlo_cost.py; this worker only measures — a
 subprocess because the host device count must be set before JAX
 initializes).
+
+Serving planes ride the same harness: the delta decode hop compiles as
+a real collective-permute crossing (collective bytes vs the
+fw-activation ``ppermute`` model over the ``(B, 1, d)`` decode shape)
+and the quantized KV append compiles to output buffers whose bytes the
+``paged`` wire's model must predict (HBM plane — `measure_result_bytes`
+instead of collective bytes).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -24,12 +31,18 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import wires as W
-from repro.launch.hlo_cost import measure_collective_bytes
+from repro.core import boundary as Bd
+from repro.launch.hlo_cost import (measure_collective_bytes,
+                                   measure_result_bytes)
 from repro.launch.mesh import make_mesh_auto, shard_map
+from repro.serving.kvcache import KVCodec
 
 N = 4
 ROWS, D = 128, 256
 BITS = (2, 4, 8)
+# serving shapes: decode hop (B, 1, d); KV append over one layer store
+HOP_B, HOP_D = 8, 256
+KV_B, KV_S, KV_HK, KV_HD = 2, 16, 2, 64
 
 
 def measure(spec, bits):
@@ -49,9 +62,63 @@ def measure(spec, bits):
     return measure_collective_bytes(fn, v, err, key)
 
 
+def measure_hop(bits):
+    """The decode hop as a REAL collective-permute crossing: delta-
+    encode on the sender, ship packed codes + scales, accumulate on the
+    receiver — collective bytes vs the fw ppermute wire model."""
+    mesh = make_mesh_auto((N,), ("s",))
+
+    def hop(h, m):
+        packed, scale, m_new = Bd.encode_delta(
+            h[0], m[0], bits=bits, stochastic=False, backend="reference")
+        perm = [(i, (i + 1) % N) for i in range(N)]
+        packed = jax.lax.ppermute(packed, "s", perm)
+        scale = jax.lax.ppermute(scale, "s", perm)
+        out = Bd.decode_accumulate(packed, scale, m[0], bits=bits,
+                                   backend="reference")
+        return out[None], m_new[None]
+
+    fn = shard_map(hop, mesh, (P("s"), P("s")), (P("s"), P("s")))
+    h = jax.ShapeDtypeStruct((N, HOP_B, 1, HOP_D), jnp.float32)
+    m = jax.ShapeDtypeStruct((N, HOP_B, 1, HOP_D), jnp.float32)
+    return measure_collective_bytes(fn, h, m)
+
+
+def measure_kv(bits):
+    """One quantize-on-append compile: the output buffers (codes +
+    scale stores) are the kv plane's HBM payload."""
+    codec = KVCodec(bits=bits, backend="reference")
+    store = codec.empty((KV_B, KV_S, KV_HK, KV_HD), jnp.float32)
+
+    def fn(codes, scale, vals, pos):
+        out = codec.append({"codes": codes, "scale": scale}, vals, pos)
+        return out["codes"], out["scale"]
+
+    specs = (jax.ShapeDtypeStruct(store["codes"].shape, jnp.uint8),
+             jax.ShapeDtypeStruct(store["scale"].shape, jnp.float32),
+             jax.ShapeDtypeStruct((KV_B, 1, KV_HK, KV_HD), jnp.float32),
+             jax.ShapeDtypeStruct((), jnp.int32))
+    return measure_result_bytes(fn, *specs)
+
+
 def main():
     names = W.wire_names("dp-grad")
-    out = {"n": N, "rows": ROWS, "d": D, "wires": names, "bits": {}}
+    out = {"n": N, "rows": ROWS, "d": D, "wires": names, "bits": {},
+           "hop": {"b": HOP_B, "d": HOP_D},
+           "kv": {"shape": [KV_B, KV_S, KV_HK, KV_HD]}}
+    fw = W.get_wire("ppermute", plane="fw-activation")
+    kv = W.get_wire("paged", plane="kv-cache")
+    for bits in BITS:
+        codec = KVCodec(bits=bits)
+        out["hop"][str(bits)] = {
+            "measured": measure_hop(bits),
+            "model": fw.wire_bytes((HOP_B, 1, HOP_D), bits, 1)}
+        out["kv"][str(bits)] = {
+            "measured": measure_kv(bits),
+            "model": kv.wire_bytes(
+                codec.grouped_shape((KV_B, KV_S, KV_HK, KV_HD)), bits, 1)}
+    out["hop"]["fp32"] = HOP_B * HOP_D * 4
+    out["hop"]["fp16"] = HOP_B * HOP_D * 2
     for bits in BITS:
         row = {}
         for name in names:

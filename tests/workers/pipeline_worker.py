@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.config import CommConfig
 from repro.configs.base import get_config
 from repro.core.aqsgd import CompressionConfig
 from repro.launch.mesh import make_debug_mesh
@@ -32,10 +33,11 @@ def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
         cfg = cfg.with_(num_layers=num_layers)
     mesh = make_debug_mesh(2, 2)
     pcfg = PL.PipelineConfig(
-        microbatches=M, warmup=warmup,
-        compression=CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
-        remat=True, buffer_bits=buffer_bits, dp_grad_bits=dp_grad_bits,
-        dp_wire=dp_wire)
+        microbatches=M, warmup=warmup, remat=True,
+        comm=CommConfig.from_legacy(
+            CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
+            buffer_bits=buffer_bits, dp_grad_bits=dp_grad_bits,
+            dp_wire=dp_wire))
     step, meta = PL.make_train_step(
         cfg, pcfg, mesh, AdamWConfig(lr=lr, warmup_steps=1,
                                      schedule="constant"),
@@ -257,8 +259,8 @@ def check_expert_parallel():
         cfg = get_config("deepseek-moe-16b", smoke=True)
         mesh = make_debug_mesh(2, 2)
         pcfg = PL.PipelineConfig(
-            microbatches=2, compression=CompressionConfig(mode="fp32"),
-            moe_mode=moe_mode)
+            microbatches=2, moe_mode=moe_mode,
+            comm=CommConfig.from_legacy(CompressionConfig(mode="fp32")))
         step, meta = PL.make_train_step(
             cfg, pcfg, mesh, AdamWConfig(lr=0.0, warmup_steps=1,
                                          schedule="constant"),
