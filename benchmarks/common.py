@@ -89,6 +89,44 @@ def tail_loss(losses, k: int = 8) -> float:
     return float(np.mean(losses[-k:]))
 
 
+# ---------------------------------------------------------------------------
+# the ONE timing-model code path shared by benchmarks/throughput_model
+# and benchmarks/e2e_compression: serialized, fully-hidden, and K-chunk
+# double-buffered tick costs (same units in as out)
+# ---------------------------------------------------------------------------
+
+def serialized_ms(compute_ms: float, wire_ms: float) -> float:
+    """Tick cost with NO compute/communication overlap: the wire waits
+    for compute and compute waits for the wire."""
+    return compute_ms + wire_ms
+
+
+def hidden_ms(compute_ms: float, wire_ms: float) -> float:
+    """Tick cost with comm fully hidden under compute (the paper's
+    overlap observation, and the K -> inf limit of `overlapped_ms`):
+    whichever side is longer sets the tick."""
+    return max(compute_ms, wire_ms)
+
+
+def overlapped_ms(compute_ms: float, wire_ms: float,
+                  chunks: int = 1) -> float:
+    """Tick cost under the K-chunk double-buffered schedule (the
+    ``--dp-chunks`` wire): the payload moves in K slices and slice
+    ``k+1``'s compute overlaps slice ``k``'s flight, so only the first
+    compute slice and the last wire slice serialize —
+
+        C/K + W/K + (K-1) * max(C, W)/K
+
+    ``chunks <= 1`` degenerates to `serialized_ms` exactly (the
+    monolithic schedule), and the limit K -> inf is `hidden_ms`.  For
+    K > 1 with C > 0 and W > 0 this is STRICTLY below serialized —
+    the acceptance gate benchmarks/e2e_compression.py asserts."""
+    if chunks <= 1:
+        return serialized_ms(compute_ms, wire_ms)
+    return (compute_ms + wire_ms
+            + (chunks - 1) * hidden_ms(compute_ms, wire_ms)) / chunks
+
+
 def write_csv(name: str, header: str, rows: list):
     path = os.path.join(RESULTS, name)
     with open(path, "w") as f:

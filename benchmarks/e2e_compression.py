@@ -34,7 +34,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import finetune, tail_loss, write_csv
+from benchmarks.common import (finetune, overlapped_ms, serialized_ms,
+                               tail_loss, write_csv)
 from benchmarks.throughput_model import (BANDWIDTHS, CFG, MACRO, MICRO,
                                          SEQ, throughput_seqs_per_s, _N)
 from repro.comm import wires as W
@@ -153,6 +154,43 @@ def main(steps: int = 50, tiny: bool = False,
     write_csv("e2e_throughput.csv",
               "bandwidth,plane,wire,fp32,act_only,act_plus_grad,speedup",
               trows)
+
+    # overlap-aware DP-wire cost model: per chunkable wire x bits x
+    # bandwidth, the per-step gradient-collective time under the
+    # monolithic serialized schedule (compute, THEN the whole wire)
+    # vs the K-chunk double-buffered schedule (`--dp-chunks`), from
+    # the ONE shared accounting in benchmarks/common.  The chunked
+    # estimate must be STRICTLY below serialized whenever both sides
+    # cost anything — asserted here for the acceptance bandwidths so
+    # the artifact cannot silently regress into "chunking is free".
+    chunkable = [n for n in dp_wires if W.get_wire(n).chunkable]
+    cc_act = CompressionConfig(mode="aqsgd", fw_bits=3, bw_bits=6)
+    OVERLAP_K = 4
+    xrows = []
+    results["overlap"] = []
+    for bname, bw in BANDWIDTHS.items():
+        comp_s = MACRO / throughput_seqs_per_s(cc_act, bw)
+        for wire in chunkable:
+            spec = W.get_wire(wire)
+            for b in (2, 4, 8):
+                wire_s = spec.wire_bytes(bucket, b, dp_workers) * 8 / bw
+                ser = serialized_ms(comp_s, wire_s)
+                ovl = overlapped_ms(comp_s, wire_s, OVERLAP_K)
+                if bname == "100Mbps":
+                    assert ovl < ser, (bname, wire, b, ovl, ser)
+                xrows.append((bname, wire, str(b), str(OVERLAP_K),
+                              f"{ser:.3f}", f"{ovl:.3f}",
+                              f"{ser / ovl:.2f}x"))
+                results["overlap"].append(
+                    {"bandwidth": bname, "wire": wire, "bits": b,
+                     "chunks": OVERLAP_K, "serialized_s": ser,
+                     "overlapped_s": ovl})
+                print(f"e2e_overlap,{bname},wire={wire},bits={b},"
+                      f"K={OVERLAP_K},serialized={ser:.3f}s,"
+                      f"overlapped={ovl:.3f}s")
+    write_csv("e2e_overlap.csv",
+              "bandwidth,wire,bits,chunks,serialized_s,overlapped_s,"
+              "gain", xrows)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)

@@ -69,13 +69,18 @@ class PlaneConfig:
     ``error_feedback`` is a DP-plane knob (``False`` drops the
     carried-error state: plain one-shot quantization); `CommConfig`
     normalizes it off on the other planes.  ``group_d`` is the DP
-    bucket's scale-group width (0 = default)."""
+    bucket's scale-group width (0 = default).  ``chunks`` is the DP
+    ring-family chunk count (K-chunk double-buffered schedule —
+    bit- and byte-identical to the monolithic K=1); `CommConfig`
+    validates it against the wire's ``chunkable`` registry flag and
+    normalizes it to 1 on the other planes."""
     bits: int = 0
     stochastic: bool = True
     backend: str = "auto"
     error_feedback: bool = True
     wire: str = ""
     group_d: int = 0
+    chunks: int = 1
 
     def codec(self) -> Codec:
         """The plane's `Codec` (bits/stochastic/backend bound once)."""
@@ -133,7 +138,27 @@ class CommConfig:
                 pc = pc.with_(wire=_DEFAULT_WIRE[fname])
             if fname == "dp" and not pc.group_d:
                 pc = pc.with_(group_d=GC.DEFAULT_GROUP_D)
-            W.get_wire(pc.wire, plane=PLANE_OF[fname])  # did-you-mean
+            spec = W.get_wire(pc.wire, plane=PLANE_OF[fname])
+            if not isinstance(pc.chunks, int) \
+                    or isinstance(pc.chunks, bool) or pc.chunks < 1:
+                raise ValueError(
+                    f"{fname}.chunks={pc.chunks!r} is invalid: the "
+                    f"chunk count must be a positive int — did you "
+                    f"mean chunks=1 (the monolithic schedule)?")
+            if fname == "dp" and pc.chunks != 1 and not spec.chunkable:
+                chunkable = [n for n in W.wire_names(PLANE_OF[fname])
+                             if W.get_wire(n,
+                                           plane=PLANE_OF[fname]
+                                           ).chunkable]
+                raise ValueError(
+                    f"dp.chunks={pc.chunks} is not supported by wire "
+                    f"{pc.wire!r} (not chunkable); chunkable wires: "
+                    f"{', '.join(chunkable)} — did you mean "
+                    f"wire={chunkable[0]!r}?")
+            if fname != "dp" and pc.chunks != 1:
+                # chunking is a DP ring-schedule knob; other planes
+                # have no chunked collective to schedule
+                pc = pc.with_(chunks=1)
             if fname != "dp" and pc.error_feedback:
                 pc = pc.with_(error_feedback=False)
             if fname == "zbuf" and pc.stochastic:
@@ -283,6 +308,7 @@ class CommConfig:
                  "--dp-grad-bits", str(self.dp.bits),
                  "--dp-wire", self.dp.wire,
                  "--dp-grad-group", str(self.dp_group_d),
+                 "--dp-chunks", str(self.dp.chunks),
                  "--kv-bits", str(self.kv.bits),
                  "--backend", self.fw.backend]
         if not self.fw.stochastic:
@@ -341,6 +367,13 @@ def add_cli_args(ap) -> None:
     ap.add_argument("--dp-grad-group", type=int,
                     default=GC.DEFAULT_GROUP_D,
                     help="DP gradient-bucket scale-group width")
+    chunkable = [n for n in dp_names if W.get_wire(n).chunkable]
+    ap.add_argument("--dp-chunks", type=int, default=1,
+                    help="ring chunk count K: double-buffer the DP "
+                         "collective (encode chunk k+1 while chunk "
+                         "k's hops fly) — bit- and byte-identical to "
+                         "the monolithic K=1; chunkable wires (from "
+                         "the registry): " + ", ".join(chunkable))
     ap.add_argument("--kv-bits", type=int, default=0,
                     help="serving KV-cache code width (0 = raw cache "
                          "dtype; quantize-on-append, "
@@ -379,6 +412,7 @@ def from_args(args) -> "CommConfig":
                          backend=args.backend),
         dp=PlaneConfig(bits=args.dp_grad_bits, wire=args.dp_wire,
                        group_d=args.dp_grad_group,
+                       chunks=getattr(args, "dp_chunks", 1),
                        error_feedback=not args.no_error_feedback,
                        **common),
         kv=PlaneConfig(bits=getattr(args, "kv_bits", 0),

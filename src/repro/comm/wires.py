@@ -61,6 +61,11 @@ class WireSpec:
     sim_allreduce: Optional[Callable] = None  # bit-/math-faithful sim
     sharded: bool = False                     # ZeRO: one segment/rank
     network: bool = True                      # False: HBM plane
+    chunkable: bool = False                   # accepts a chunks= kwarg:
+                                              # K-chunk double-buffered
+                                              # schedule, bit- and
+                                              # byte-identical to K=1
+                                              # (ring-family wires only)
     psum_lowered: bool = False                # single psum collective:
                                               # the byte model counts
                                               # logical lanes, so ring-
@@ -76,10 +81,13 @@ _REGISTRY: dict[tuple[str, str], WireSpec] = {}
 def register_wire(name: str, *, summary: str, wire_bytes,
                   plane: str = "dp-grad", collective=None,
                   sim_allreduce=None, sharded: bool = False,
-                  network: bool = True,
+                  network: bool = True, chunkable: bool = False,
                   psum_lowered: bool = False) -> WireSpec:
     """Register a wire under ``(plane, name)``; names are unique per
-    plane.  Returns the spec (so modules can keep a handle)."""
+    plane.  Returns the spec (so modules can keep a handle).
+    ``chunkable=True`` declares the collective accepts a ``chunks=``
+    kwarg (the K-chunk double-buffered schedule) — `CommConfig`
+    validates ``dp.chunks`` against this flag."""
     assert plane in PLANES, plane
     key = (plane, name)
     if key in _REGISTRY:
@@ -88,7 +96,8 @@ def register_wire(name: str, *, summary: str, wire_bytes,
     spec = WireSpec(name=name, plane=plane, summary=summary,
                     wire_bytes=wire_bytes, collective=collective,
                     sim_allreduce=sim_allreduce, sharded=sharded,
-                    network=network, psum_lowered=psum_lowered)
+                    network=network, chunkable=chunkable,
+                    psum_lowered=psum_lowered)
     _REGISTRY[key] = spec
     return spec
 
@@ -253,7 +262,7 @@ register_wire(
     wire_bytes=_kv_bytes)
 
 register_wire(
-    "ring",
+    "ring", chunkable=True,
     summary="packed b-bit code segments on rotation ppermute hops + "
             "packed code sums (bandwidth-optimal; bit-identical to "
             "psum)",
@@ -268,7 +277,7 @@ register_wire(
     collective=C.ef_psum_mean_bucket,
     sim_allreduce=GC.compress_allreduce)
 register_wire(
-    "ring-sharded", sharded=True,
+    "ring-sharded", sharded=True, chunkable=True,
     summary="ZeRO wire: the ring's reduce-scatter half only, "
             "segment-owner optimizer, f32 updated-parameter all-gather",
     wire_bytes=_ring_sharded_bytes,

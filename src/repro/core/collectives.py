@@ -75,6 +75,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import boundary as B
 from repro.core import grad_compress as GC
@@ -90,6 +91,37 @@ WIRES = ("psum", "ring", "ring-sharded")
 # the ONE segment-geometry source (defined next to the bucket layout
 # to avoid a circular import; both names are public API)
 ring_segment_rows = GC.ring_segment_rows
+
+
+def ring_chunk_bounds(seg: int, chunks: int) -> tuple:
+    """Row bounds that cut one ``seg``-row ring segment into ``chunks``
+    chunks — the single chunk-geometry source of the double-buffered
+    ring schedule, derived from `ring_segment_rows` itself (chunk width
+    = ``ring_segment_rows(seg, chunks)``, the same ceil-division that
+    cuts the bucket into segments).
+
+    Returns a tuple of ``(lo, hi)`` half-open row ranges that partition
+    ``range(seg)`` exactly: disjoint, covering, in order, with only the
+    LAST chunk possibly ragged (shorter).  When ``chunks`` does not
+    divide ``seg`` the realized chunk count may be smaller than
+    requested (ceil-division minimality) — callers iterate the returned
+    bounds, never ``range(chunks)``.
+
+    Invalid chunk counts raise loudly: ``chunks`` must be a positive
+    int no larger than ``seg`` (a chunk carries at least one row)."""
+    if not isinstance(chunks, int) or isinstance(chunks, bool) \
+            or chunks < 1:
+        raise ValueError(
+            f"chunks={chunks!r} is invalid: the ring chunk count must "
+            f"be a positive int — did you mean chunks=1 (the "
+            f"monolithic schedule)?")
+    if chunks > seg:
+        raise ValueError(
+            f"chunks={chunks} exceeds the segment's {seg} rows (each "
+            f"chunk ships at least one row per hop); valid range is "
+            f"1..{seg} — did you mean chunks={seg}?")
+    cw = ring_segment_rows(seg, chunks)
+    return tuple((lo, min(lo + cw, seg)) for lo in range(0, seg, cw))
 
 
 def _axis_tuple(axis_name):
@@ -199,9 +231,127 @@ def _reduce_scatter_codes(packed, codes, n, ax, axis_name, bits,
     return acc, seg, i
 
 
+def make_chunk_encoder(v, s, bits: int, key, n: int, bounds,
+                       *, stochastic: bool = True,
+                       backend: str = "auto"):
+    """Per-chunk encoder for the double-buffered ring, BIT-IDENTICAL to
+    the monolithic `grad_compress.ef_encode` sender per row.
+
+    ``v``/``s``: the compensated (rows, group_d) bucket and its shared
+    rowwise scale; ``bounds``: `ring_chunk_bounds` output over
+    ``seg = ring_segment_rows(rows, n)``.  Returns ``enc(ci)`` mapping
+    a chunk index to ``(packed, codes)`` of shape ``(n, cw, ·)`` — the
+    packed payload and int32 codes of chunk ``ci``'s rows across ALL
+    ``n`` device segments (what the rotation hops slice senders from).
+
+    Bit-parity with the monolithic encode rests on two invariants,
+    both regression-gated (tests/test_grad_compress.py,
+    tests/test_properties.py):
+
+    * the full-bucket stochastic noise is drawn ONCE here with the
+      same ``jax.random.uniform(key, v.shape)`` call the boundary's
+      `_noise` makes, then row-sliced per chunk — so every live row
+      quantizes against the identical noise value regardless of K
+      (the explicit ``noise=`` argument also bypasses the on-core
+      PRNG opt-in, whose stream is grid-position-dependent and
+      therefore not chunking-invariant);
+    * pad rows of a ragged LAST segment are zeroed in code space
+      after encoding (a static mask), matching the monolithic path's
+      zero-padding of the encoded arrays exactly — quantize(0) under
+      a shared scale is NOT zero, so masking must happen after."""
+    rows, d = v.shape
+    seg = ring_segment_rows(rows, n)
+    pad = seg * n - rows
+    noise = jax.random.uniform(key, v.shape, jnp.float32) \
+        if stochastic else None
+
+    def _padded(a):
+        return jnp.pad(a, ((0, pad), (0, 0))) if pad else a
+
+    v3 = _padded(v).reshape(n, seg, d)
+    s3 = _padded(s).reshape(n, seg, 1)
+    u3 = _padded(noise).reshape(n, seg, d) if stochastic else None
+
+    def enc(ci):
+        lo, hi = bounds[ci]
+        cw = hi - lo
+        vs = v3[:, lo:hi].reshape(n * cw, d)
+        ss = s3[:, lo:hi].reshape(n * cw, 1)
+        us = u3[:, lo:hi].reshape(n * cw, d) if stochastic else None
+        packed, codes = B.encode_codes_with_scale(
+            vs, ss, bits=bits, stochastic=stochastic, key=key,
+            noise=us, pack=True, backend=backend)
+        packed = packed.reshape(n, cw, -1)
+        codes = codes.reshape(n, cw, d)
+        if pad:
+            gidx = np.arange(n)[:, None] * seg \
+                + np.arange(lo, hi)[None, :]
+            live = gidx < rows
+            if not live.all():
+                live_j = jnp.asarray(live)[..., None]
+                packed = jnp.where(live_j, packed, 0)
+                codes = jnp.where(live_j, codes, 0)
+        return packed, codes
+
+    return enc
+
+
+def _chunked_reduce_scatter(v, s, n, ax, axis_name, bits, key,
+                            *, stochastic, backend, chunks):
+    """The ring's reduce-scatter half, chunked and double-buffered:
+    while chunk ``c``'s rotation hops are in flight, chunk ``c+1``
+    encodes (the encode is issued between posting the ppermutes and
+    consuming their results, so the compiler is free to overlap it
+    with the hops).  Ships exactly the same bytes as
+    `_reduce_scatter_codes` — chunking changes scheduling, never
+    payload — and is bit-identical to it (int32 code sums are exact
+    in any order; the encoder is row-sliced, see `make_chunk_encoder`).
+
+    Returns ``(acc, seg, i, new_err)``: the rank's exact (seg, d) own-
+    segment code sum, the segment rows, the flat ring index, and the
+    error-feedback carry (computed from the reassembled full-bucket
+    codes exactly as `grad_compress.ef_encode` does)."""
+    rows, d = v.shape
+    seg = ring_segment_rows(rows, n)
+    bounds = ring_chunk_bounds(seg, chunks)
+    enc = make_chunk_encoder(v, s, bits, key, n, bounds,
+                             stochastic=stochastic, backend=backend)
+    i = _flat_axis_index(axis_name)
+
+    accs, code_chunks = [], []
+    packed_c, codes_c = enc(0)
+    for ci in range(len(bounds)):
+        code_chunks.append(codes_c)
+        acc = jax.lax.dynamic_index_in_dim(codes_c, i, 0,
+                                           keepdims=False)
+        recvs = []
+        for t in range(1, n):
+            perm = [(src, (src + t) % n) for src in range(n)]
+            send = jax.lax.dynamic_index_in_dim(
+                packed_c, (i + t) % n, 0, keepdims=False)
+            recvs.append(jax.lax.ppermute(send, ax, perm))
+        if ci + 1 < len(bounds):
+            # double buffer: encode the NEXT chunk while this chunk's
+            # hops are in flight (data-independent of the recvs)
+            packed_c, codes_c = enc(ci + 1)
+        for recv in recvs:
+            acc = B.accumulate_codes(recv, acc, bits=bits,
+                                     backend=backend)
+        accs.append(acc)
+
+    acc = jnp.concatenate(accs, axis=0) if len(accs) > 1 else accs[0]
+    codes_full = jnp.concatenate(code_chunks, axis=1) \
+        if len(code_chunks) > 1 else code_chunks[0]
+    codes_flat = codes_full.reshape(n * seg, d)[:rows]
+    q = B.decode_sum_mean(codes_flat, s, bits=bits, n=1,
+                          backend=backend)
+    return acc, seg, i, v - q
+
+
 def ring_ef_reduce_scatter_bucket(v_grad, err, axis_name, bits: int, key,
                                   *, stochastic: bool = True,
-                                  backend: str = "auto"):
+                                  backend: str = "auto",
+                                  chunks: int = 1):
     """ZeRO-sharded error-feedback compressed reduce-scatter: the ring
     stopped at the segment midpoint — each rank keeps only its OWN
     segment's mean; there is no all-gather of sums at all.
@@ -226,22 +376,36 @@ def ring_ef_reduce_scatter_bucket(v_grad, err, axis_name, bits: int, key,
     Error feedback stays FULL-bucket per rank: every rank encodes its
     whole compensated bucket (it must, to ship every segment to its
     owner), so the carried error is the same (rows, group_d) state the
-    other wires carry — only the *reduced gradient* is sharded."""
+    other wires carry — only the *reduced gradient* is sharded.
+
+    ``chunks`` > 1 runs the reduce-scatter half chunked and
+    double-buffered (`_chunked_reduce_scatter`) — bit-identical,
+    byte-identical, scheduling-only; ``chunks=1`` is the exact
+    monolithic code path.  Invalid chunk counts raise loudly
+    (`ring_chunk_bounds`)."""
     axes = _axis_tuple(axis_name)
     ax = axes if len(axes) > 1 else axes[0]
     n = jax.lax.psum(1, axis_name)
     v = v_grad.astype(jnp.float32) + err
     s = jnp.maximum(jax.lax.pmax(GC.local_scale(v), axis_name), _EPS)
-    packed, codes, new_err = GC.ef_encode(
-        v, s, bits, _fold_axis_index(key, axis_name),
-        stochastic=stochastic, backend=backend, pack=True)
-    if n == 1:
-        mean = B.decode_sum_mean(codes, s, bits=bits, n=1,
-                                 backend=backend)
-        return mean, new_err
-
-    acc, seg, i = _reduce_scatter_codes(packed, codes, n, ax, axis_name,
-                                        bits, backend)
+    kf = _fold_axis_index(key, axis_name)
+    if chunks != 1:
+        # validate loudly even on paths that cannot overlap (n == 1)
+        ring_chunk_bounds(ring_segment_rows(v.shape[0], n), chunks)
+    if chunks == 1 or n == 1:
+        packed, codes, new_err = GC.ef_encode(
+            v, s, bits, kf, stochastic=stochastic, backend=backend,
+            pack=True)
+        if n == 1:
+            mean = B.decode_sum_mean(codes, s, bits=bits, n=1,
+                                     backend=backend)
+            return mean, new_err
+        acc, seg, i = _reduce_scatter_codes(packed, codes, n, ax,
+                                            axis_name, bits, backend)
+    else:
+        acc, seg, i, new_err = _chunked_reduce_scatter(
+            v, s, n, ax, axis_name, bits, kf, stochastic=stochastic,
+            backend=backend, chunks=chunks)
     rows = v.shape[0]
     pad = seg * n - rows
     s_pad = jnp.pad(s, ((0, pad), (0, 0))) if pad else s
@@ -254,7 +418,8 @@ def ring_ef_reduce_scatter_bucket(v_grad, err, axis_name, bits: int, key,
 
 def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
                                *, stochastic: bool = True,
-                               backend: str = "auto"):
+                               backend: str = "auto",
+                               chunks: int = 1):
     """Error-feedback compressed allreduce as a bandwidth-optimal ring:
     packed b-bit codes ship on the wire, accumulation is local.
 
@@ -274,22 +439,35 @@ def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
       all-gather: pack my segment sums at b + ceil(log2 n) bits and
         rotate them to every device the same way; unpack all segments
         and decode the mean locally.
+
+    ``chunks`` > 1 chunks and double-buffers the reduce-scatter half
+    (`_chunked_reduce_scatter`) — bit-identical, byte-identical,
+    scheduling-only; ``chunks=1`` is the exact monolithic code path.
+    Invalid chunk counts raise loudly (`ring_chunk_bounds`).
     """
     axes = _axis_tuple(axis_name)
     ax = axes if len(axes) > 1 else axes[0]
     n = jax.lax.psum(1, axis_name)
     v = v_grad.astype(jnp.float32) + err
     s = jnp.maximum(jax.lax.pmax(GC.local_scale(v), axis_name), _EPS)
-    packed, codes, new_err = GC.ef_encode(
-        v, s, bits, _fold_axis_index(key, axis_name),
-        stochastic=stochastic, backend=backend, pack=True)
-    if n == 1:
-        mean = B.decode_sum_mean(codes, s, bits=bits, n=1,
-                                 backend=backend)
-        return mean, new_err
-
-    acc, seg, i = _reduce_scatter_codes(packed, codes, n, ax, axis_name,
-                                        bits, backend)
+    kf = _fold_axis_index(key, axis_name)
+    if chunks != 1:
+        # validate loudly even on paths that cannot overlap (n == 1)
+        ring_chunk_bounds(ring_segment_rows(v.shape[0], n), chunks)
+    if chunks == 1 or n == 1:
+        packed, codes, new_err = GC.ef_encode(
+            v, s, bits, kf, stochastic=stochastic, backend=backend,
+            pack=True)
+        if n == 1:
+            mean = B.decode_sum_mean(codes, s, bits=bits, n=1,
+                                     backend=backend)
+            return mean, new_err
+        acc, seg, i = _reduce_scatter_codes(packed, codes, n, ax,
+                                            axis_name, bits, backend)
+    else:
+        acc, seg, i, new_err = _chunked_reduce_scatter(
+            v, s, n, ax, axis_name, bits, kf, stochastic=stochastic,
+            backend=backend, chunks=chunks)
     rows, d = v.shape
 
     # ---- all-gather: rotate the packed segment sums to everyone --------
@@ -309,7 +487,7 @@ def ring_ef_reduce_mean_bucket(v_grad, err, axis_name, bits: int, key,
 
 
 def ring_wire_bytes(shape, bits: int, n: int = 2, *,
-                    sharded: bool = False) -> int:
+                    sharded: bool = False, chunks: int = 1) -> int:
     """Collective bytes of the compressed ring for one (rows, d) bucket
     on an n-device ring — exact, matching what `launch/hlo_cost`
     measures on the traced program (tests/test_hlo_cost.py pins this):
@@ -325,9 +503,18 @@ def ring_wire_bytes(shape, bits: int, n: int = 2, *,
     stopped at the midpoint, so the all-gather term vanishes and only
     the b-bit reduce-scatter hops and the scale pmax remain — strictly
     fewer bytes than the full ring at every b whenever n > 1.
+
+    ``chunks`` is accepted (and validated via `ring_chunk_bounds`)
+    because the chunked schedule ships IDENTICAL total bytes: the
+    per-hop chunk payloads of one segment sum to exactly the
+    monolithic segment payload (packing is per-row, so chunk widths
+    add).  tests/test_hlo_cost.py pins the chunked wires' compiled
+    collective bytes against this same model.
     """
     rows, d = shape
     seg = ring_segment_rows(rows, n)
+    if chunks != 1:
+        ring_chunk_bounds(seg, chunks)   # bytes unchanged, validate only
     hops = max(n - 1, 0)
     gather = 0 if sharded else hops * seg * Q.sum_packed_width(d, bits, n)
     return (hops * seg * Q.packed_width(d, bits)

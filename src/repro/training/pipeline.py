@@ -459,12 +459,15 @@ def make_dp_grad_wire(mesh, comm: CommConfig):
     # serves the full-mean wires.
     spec = CW.get_wire(dpc.wire, plane="dp-grad")
     assert spec.collective is not None and not spec.sharded, dpc.wire
+    # chunkable wires take the K-chunk double-buffered schedule knob;
+    # CommConfig already validated chunks against the registry flag
+    extra = {"chunks": dpc.chunks} if spec.chunkable else {}
 
     def wire(g2d, err, key):
         e = err[0] if dpc.error_feedback else jnp.zeros_like(err[0])
         mean, new_err = spec.collective(
             g2d, e, axis, dpc.bits, key,
-            stochastic=dpc.stochastic, backend=dpc.backend)
+            stochastic=dpc.stochastic, backend=dpc.backend, **extra)
         if not dpc.error_feedback:
             new_err = jnp.zeros_like(new_err)
         return mean, new_err[None]
@@ -508,12 +511,13 @@ def make_dp_sharded_update(mesh, comm: CommConfig,
     dpc = comm.dp
     spec = CW.get_wire(dpc.wire, plane="dp-grad")
     assert spec.sharded and spec.collective is not None, dpc.wire
+    extra = {"chunks": dpc.chunks} if spec.chunkable else {}
 
     def upd(g2d, err, pb, mu, nu, step, key):
         e = err[0] if dpc.error_feedback else jnp.zeros_like(err[0])
         seg_mean, new_err = spec.collective(
             g2d, e, axis, dpc.bits, key,
-            stochastic=dpc.stochastic, backend=dpc.backend)
+            stochastic=dpc.stochastic, backend=dpc.backend, **extra)
         if not dpc.error_feedback:
             new_err = jnp.zeros_like(new_err)
         new_pseg, new_opt = adamw.apply_bucket_updates(
@@ -761,8 +765,35 @@ def make_pipeline_fn(cfg: ModelConfig, pcfg: PipelineConfig,
         positions = jnp.broadcast_to(
             jnp.arange(seq, dtype=jnp.int32), (mb, seq))
 
+        def _read_slices(mo, mi, j):
+            """Pre-read the buffer slices tick ``j + k`` consumes: the
+            send-side messages of microbatch clip(j) and the recv-side
+            messages of microbatch clip(j+1) (the same clip the tick
+            itself applies, so the last pre-read is in range even when
+            it goes unused)."""
+            jp = jnp.clip(j, 0, M - 1)
+            jr = jnp.clip(j + 1, 0, M - 1)
+            ids_s = jax.lax.dynamic_index_in_dim(ids, jp, 0,
+                                                 keepdims=False)
+            ids_r = jax.lax.dynamic_index_in_dim(ids, jr, 0,
+                                                 keepdims=False)
+            return (buffer_read(pcfg, mo, ids_s),
+                    buffer_read(pcfg, mi, ids_r))
+
         def tick(carry, t):
-            state_in, outputs, mo, mi = carry
+            # buffered modes carry (mo_s, mi_s) — THIS tick's buffer
+            # slices, pre-read at the END of the previous tick (after
+            # its writes, so the values are identical to an in-tick
+            # read).  The transfer's buffer operands are then ready
+            # before the stage compute finishes: the next-tick message
+            # decode and the activation ppermute overlap the compute
+            # instead of serializing after it.  Bit-exact — a pure
+            # scheduling change, gated by the pipeline_worker parity
+            # suites.
+            if has_bufs:
+                state_in, outputs, mo, mi, mo_s, mi_s = carry
+            else:
+                state_in, outputs, mo, mi = carry
             j = t - k
             valid_p = (j >= 0) & (j < M)
             jp = jnp.clip(j, 0, M - 1)
@@ -785,10 +816,7 @@ def make_pipeline_fn(cfg: ModelConfig, pcfg: PipelineConfig,
             jr = jnp.clip(j + 1, 0, M - 1)
             valid_r = (j + 1 >= 0) & (j + 1 < M)
             ids_r = jax.lax.dynamic_index_in_dim(ids, jr, 0, keepdims=False)
-            if has_bufs:
-                mo_s = buffer_read(pcfg, mo, ids_s)
-                mi_s = buffer_read(pcfg, mi, ids_r)
-            else:
+            if not has_bufs:
                 mo_s = mi_s = jnp.zeros_like(out, jnp.float32)
             recv, nmo, nmi = transfer(out, mo_s, mi_s,
                                       jax.random.fold_in(key, t))
@@ -797,13 +825,21 @@ def make_pipeline_fn(cfg: ModelConfig, pcfg: PipelineConfig,
                                   valid_p & (k < K - 1))
                 mi = buffer_write(pcfg, mi, ids_r, nmi,
                                   valid_r & (k > 0))
+                mo_sn, mi_sn = _read_slices(mo, mi, j + 1)
+                return (recv, outputs, mo, mi, mo_sn, mi_sn), None
             return (recv, outputs, mo, mi), None
 
         outputs0 = jnp.zeros((M, mb, seq, d), h_all.dtype)
         state0 = jnp.zeros((mb, seq, d), h_all.dtype)
-        (_, outputs, mo, mi), _ = jax.lax.scan(
-            tick, (state0, outputs0, m_out, m_in),
-            jnp.arange(T, dtype=jnp.int32))
+        if has_bufs:
+            mo_s0, mi_s0 = _read_slices(m_out, m_in, 0 - k)
+            (_, outputs, mo, mi, _, _), _ = jax.lax.scan(
+                tick, (state0, outputs0, m_out, m_in, mo_s0, mi_s0),
+                jnp.arange(T, dtype=jnp.int32))
+        else:
+            (_, outputs, mo, mi), _ = jax.lax.scan(
+                tick, (state0, outputs0, m_out, m_in),
+                jnp.arange(T, dtype=jnp.int32))
         if has_bufs:
             restage = lambda a: a[None]
             return (outputs[None], jax.tree.map(restage, mo),

@@ -33,6 +33,8 @@ SAMPLE_CONFIGS = [
     CommConfig(mode="directq", fw=PlaneConfig(bits=2),
                bw=PlaneConfig(bits=4), zbuf=PlaneConfig(bits=2),
                dp=PlaneConfig(bits=8, wire="ring-sharded", group_d=256)),
+    CommConfig(dp=PlaneConfig(bits=4, chunks=2)),
+    CommConfig(dp=PlaneConfig(bits=4, wire="ring-sharded", chunks=4)),
     CommConfig(fw=PlaneConfig(bits=4, stochastic=False),
                bw=PlaneConfig(bits=8, stochastic=False),
                dp=PlaneConfig(bits=4, stochastic=False,
@@ -98,6 +100,79 @@ def test_json_subset_and_unknown_keys():
         CommConfig.from_json('{"pd": {"bits": 4}}')
     with pytest.raises(ValueError, match="unknown dp plane key"):
         CommConfig.from_json('{"dp": {"bitz": 4}}')
+
+
+# ---------------------------------------------------------------------------
+# chunked-schedule knob: validation, registry gating, CLI surface
+# ---------------------------------------------------------------------------
+
+def test_chunks_invalid_counts_raise_loudly():
+    """chunks must be a positive int: zero, negatives, bools, and
+    non-ints all raise with the did-you-mean-style hint, at both the
+    config layer and the collective's own geometry check."""
+    for bad in (0, -1, True, 1.5, "2"):
+        with pytest.raises(ValueError,
+                           match="did you mean chunks=1"):
+            CommConfig(dp=PlaneConfig(bits=4, chunks=bad))
+        with pytest.raises(ValueError,
+                           match="did you mean chunks=1"):
+            C.ring_chunk_bounds(8, bad)
+
+
+def test_chunks_exceeding_segment_rows_raise():
+    """A chunk ships at least one row per hop: K > seg raises with the
+    valid range and the nearest legal count."""
+    with pytest.raises(ValueError, match=r"exceeds the segment's 8 "
+                                         r"rows.*did you mean "
+                                         r"chunks=8"):
+        C.ring_chunk_bounds(8, 9)
+    # ...and through the byte-model entry point, which validates the
+    # same geometry even though chunking never changes its answer
+    with pytest.raises(ValueError, match="exceeds the segment"):
+        C.ring_wire_bytes((6, 8), 4, n=2, chunks=7)
+    assert C.ring_wire_bytes((6, 8), 4, n=2, chunks=3) == \
+        C.ring_wire_bytes((6, 8), 4, n=2)
+
+
+def test_chunks_on_non_chunkable_wires_rejected():
+    """dp.chunks != 1 on a wire whose collective has no chunked
+    schedule (psum, fp16) must raise loudly, naming the chunkable
+    wires — never silently ignore the knob."""
+    for wire in ("psum", "fp16"):
+        with pytest.raises(ValueError,
+                           match=r"not supported by wire.*chunkable "
+                                 r"wires: ring, ring-sharded.*did "
+                                 r"you mean wire='ring'"):
+            CommConfig(dp=PlaneConfig(bits=4, wire=wire, chunks=2))
+    # chunkable wires accept it
+    assert CommConfig(dp=PlaneConfig(bits=4, chunks=2)).dp.chunks == 2
+    assert CommConfig(dp=PlaneConfig(
+        bits=4, wire="ring-sharded", chunks=3)).dp.chunks == 3
+
+
+def test_chunkable_flags_match_registry():
+    """`chunkable` is a registry property: exactly the ring-family DP
+    wires declare it, and the --dp-chunks help text is generated from
+    the registry (naming every chunkable wire)."""
+    assert [s.name for s in list_wires("dp-grad") if s.chunkable] == \
+        ["ring", "ring-sharded"]
+    help_text = _parser().format_help()
+    assert "--dp-chunks" in help_text
+    assert "ring, ring-sharded" in help_text
+
+
+def test_dp_chunks_cli_and_json_round_trip():
+    """--dp-chunks reaches CommConfig.dp.chunks and survives both the
+    flag and JSON surfaces (the parametrized round-trip tests cover
+    the full-config equality; this pins the knob's plumbing)."""
+    args = _parser().parse_args(["--dp-grad-bits", "4",
+                                 "--dp-chunks", "4"])
+    cfg = comm_cli.from_args(args)
+    assert cfg.dp.chunks == 4
+    assert "--dp-chunks" in cfg.to_flags()
+    assert CommConfig.from_json(cfg.to_json()) == cfg
+    rt = CommConfig.from_json('{"dp": {"bits": 4, "chunks": 2}}')
+    assert rt.dp.chunks == 2
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,33 @@ def test_launch_train_fp16_wire():
     assert "final loss" in r.stdout
 
 
+def test_launch_train_chunked_ring_identical_losses():
+    """`--dp-chunks 2` (the double-buffered chunked ring) through the
+    real `launch.train` CLI produces the IDENTICAL printed loss stream
+    as the monolithic `--dp-chunks 1` run — chunking is scheduling
+    only, so with deterministic rounding every step loss matches to
+    the printed digit."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    outs = {}
+    for chunks in ("1", "2"):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--smoke",
+             "--distributed", "--data-par", "2", "--stages", "2",
+             "--steps", "3", "--batch", "4", "--samples", "8",
+             "--seq", "32", "--microbatches", "2", "--no-stochastic",
+             "--dp-grad-bits", "4", "--dp-wire", "ring",
+             "--dp-chunks", chunks],
+            capture_output=True, text=True, timeout=900, env=env)
+        assert r.returncode == 0, \
+            f"\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+        outs[chunks] = [ln for ln in r.stdout.splitlines()
+                        if "loss" in ln]
+    assert outs["1"], outs
+    assert outs["1"] == outs["2"], (outs["1"], outs["2"])
+
+
 def test_quantized_psum_mean():
     """b-bit compressed allreduce: replica-consistent and unbiased."""
     out = run_worker("collectives_worker.py", "run")

@@ -512,6 +512,57 @@ def test_oncore_prng_gate_refuses_without_support(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# chunked encoder determinism (the double-buffered ring's sender)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("stoch", [False, True])
+@pytest.mark.parametrize("n,chunks", [(2, 2), (3, 2), (4, 3), (4, 4)])
+def test_chunk_encoder_bit_identical_to_monolithic(bits, stoch, n,
+                                                   chunks, monkeypatch):
+    """`collectives.make_chunk_encoder` — the double-buffered ring's
+    per-chunk sender — reassembles to the BIT-IDENTICAL packed payload,
+    codes, and error carry `grad_compress.ef_encode` produces for the
+    same key, for every chunk count including ragged ones.  With the
+    on-core PRNG opt-in OFF, the chunked path's once-drawn row-sliced
+    noise is exactly the boundary `_noise` draw, so stochastic rounding
+    is chunking-invariant too (the on-core stream is grid-position-
+    dependent, which is why the encoder pins noise explicitly)."""
+    from repro.core import collectives as C
+
+    monkeypatch.delenv("REPRO_ONCORE_PRNG", raising=False)
+    rows, d = 79, 128
+    v = jax.random.normal(jax.random.PRNGKey(21), (rows, d)) * 0.7
+    v = v.at[3].set(0.0)
+    s = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    packed_m, codes_m, err_m = GC.ef_encode(v, s, bits, KEY,
+                                            stochastic=stoch,
+                                            backend="reference",
+                                            pack=True)
+    seg = C.ring_segment_rows(rows, n)
+    bounds = C.ring_chunk_bounds(seg, chunks)
+    enc = C.make_chunk_encoder(v, s, bits, KEY, n, bounds,
+                               stochastic=stoch, backend="reference")
+    packed_c = jnp.concatenate([enc(ci)[0] for ci in
+                                range(len(bounds))], axis=1)
+    codes_c = jnp.concatenate([enc(ci)[1] for ci in
+                               range(len(bounds))], axis=1)
+    live_p = packed_c.reshape(n * seg, -1)[:rows]
+    live_c = codes_c.reshape(n * seg, d)[:rows]
+    np.testing.assert_array_equal(np.asarray(live_p),
+                                  np.asarray(packed_m))
+    np.testing.assert_array_equal(np.asarray(live_c),
+                                  np.asarray(codes_m))
+    # pad rows (ragged last segment) are zeroed in code space
+    pad_c = np.asarray(codes_c.reshape(n * seg, d)[rows:])
+    assert pad_c.size == 0 or not pad_c.any()
+    # the error carry recomputed from the reassembled codes matches
+    q = B.decode_sum_mean(live_c, s, bits=bits, n=1,
+                          backend="reference")
+    np.testing.assert_array_equal(np.asarray(v - q), np.asarray(err_m))
+
+
+# ---------------------------------------------------------------------------
 # the gradient path is fused end-to-end (no unfused quantize calls)
 # ---------------------------------------------------------------------------
 

@@ -119,6 +119,27 @@ def test_registry_wire_bytes_models_are_exact():
             assert row[name] == row["model_" + name], (bits, name, row)
 
 
+def test_chunked_wire_bytes_equal_monolithic_model():
+    """The chunked double-buffered schedule must not change what goes
+    on the wire: for every chunkable DP wire, at every tested K
+    (including the ragged K=3 at seg=32) and every width, the
+    HLO-measured collective bytes of the ``chunks=K`` compile equal
+    the MONOLITHIC ``wire_bytes`` model EXACTLY — K slices of the same
+    payload, not K payloads, and no hidden padding bytes."""
+    from repro.comm import wires as W
+    out = _wire_measurements()
+    chunkable = [n for n in out["wires"]
+                 if W.get_wire(n, plane="dp-grad").chunkable]
+    assert chunkable == ["ring", "ring-sharded"]
+    for bits in (2, 4, 8):
+        row = out["bits"][str(bits)]
+        assert set(row["chunked"]) == set(chunkable), row["chunked"]
+        for name in chunkable:
+            for k in ("2", "3", "4"):
+                assert row["chunked"][name][k] == \
+                    row["model_" + name], (bits, name, k, row)
+
+
 def test_fp16_wire_bytes_between_sharded_and_psum():
     """The fp16 passthrough ships exactly rows*d*2 bytes — half the
     psum baseline, independent of the bits knob — and the b-bit codec

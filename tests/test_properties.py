@@ -11,8 +11,10 @@ pytest.importorskip("hypothesis")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis import assume, given, settings, strategies as st
 
+from repro.core import boundary as B
+from repro.core import collectives as C
 from repro.core import quantization as q
 from repro.kernels.quant_pack import delta_quantize_pack
 
@@ -47,6 +49,70 @@ def test_property_quantize_within_grid(bits, seed, scale_pow):
     x = jax.random.normal(key, (4, 64)) * (10.0 ** scale_pow)
     codes, _ = q.quantize(x, bits, stochastic=True, key=key)
     assert int(jnp.max(codes)) <= (1 << bits) - 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows=st.integers(1, 97), n=st.integers(1, 9),
+       chunks=st.integers(1, 12))
+def test_property_chunk_geometry_partitions_exactly(rows, n, chunks):
+    """`ring_segment_rows` + `ring_chunk_bounds` partition every
+    bucket exactly, ragged cases included: the n device segments cover
+    [0, rows) disjointly (the last one short when n does not divide
+    rows), and the K chunk bounds cover [0, seg) disjointly — sorted,
+    adjacent, nonempty, ceil-division-minimal — or raise loudly when
+    K exceeds the segment's rows."""
+    seg = C.ring_segment_rows(rows, n)
+    covered = [i for r in range(n)
+               for i in range(r * seg, min((r + 1) * seg, rows))]
+    assert covered == list(range(rows))
+    if chunks > seg:
+        with pytest.raises(ValueError, match="exceeds the segment"):
+            C.ring_chunk_bounds(seg, chunks)
+        return
+    bounds = C.ring_chunk_bounds(seg, chunks)
+    assert all(lo < hi for lo, hi in bounds)
+    assert bounds[0][0] == 0 and bounds[-1][1] == seg
+    assert all(b[0] == a[1] for a, b in zip(bounds, bounds[1:]))
+    cw = C.ring_segment_rows(seg, chunks)
+    assert all(hi - lo == cw for lo, hi in bounds[:-1])
+    # realized chunk count is the ceil-division minimum (may be < K)
+    assert len(bounds) == -(-seg // cw) <= chunks
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]),
+       rows=st.integers(1, 40),
+       chunks=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_property_chunked_decode_concat_equals_monolithic(
+        bits, rows, chunks, seed):
+    """Row-sliced encode/decode under one shared scale concatenates to
+    the bit-identical monolithic result: quantization is rowwise, so
+    chunk boundaries cannot leak across rows — the invariant that
+    makes the chunked ring schedule bit-equal to the monolithic one."""
+    assume(chunks <= rows)
+    d = 32
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (rows, d), dtype=jnp.float32) * 2.0
+    s = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    bounds = C.ring_chunk_bounds(rows, chunks)
+    codes_m = B.encode_codes_with_scale(x, s, bits=bits,
+                                        stochastic=False,
+                                        backend="reference")
+    codes_c = jnp.concatenate(
+        [B.encode_codes_with_scale(x[lo:hi], s[lo:hi], bits=bits,
+                                   stochastic=False,
+                                   backend="reference")
+         for lo, hi in bounds], axis=0)
+    np.testing.assert_array_equal(np.asarray(codes_c),
+                                  np.asarray(codes_m))
+    dec_m = B.decode_sum_mean(codes_m, s, bits=bits, n=1,
+                              backend="reference")
+    dec_c = jnp.concatenate(
+        [B.decode_sum_mean(codes_m[lo:hi], s[lo:hi], bits=bits, n=1,
+                           backend="reference")
+         for lo, hi in bounds], axis=0)
+    np.testing.assert_array_equal(np.asarray(dec_c), np.asarray(dec_m))
 
 
 @settings(max_examples=10, deadline=None)

@@ -22,6 +22,13 @@ segment) AND on compound pod x data axes (2x2 and the non-power-of-two
 2x3 — the flat row-major rank must drive both the noise keys,
 `collectives._fold_axis_index`, and the ring rotation,
 `collectives._flat_axis_index`).
+
+The chunked double-buffered schedule (``chunks=K``) rides the same
+gate: for K in {1, 2, 4} plus a ragged K (seg % K != 0), the chunked
+ring and chunked ring-sharded wires must be BIT-IDENTICAL to their
+monolithic forms — means, owned segments, and telescoped error states
+over all steps (int32 code sums are exact in any order and the chunk
+encoder row-slices the same noise, so chunking is scheduling only).
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -59,17 +66,18 @@ def _trees(step, w):
     return [one(k) for k in ks]
 
 
-def run_case(shape, axes, wire_axis, bits, backend):
+def run_case(shape, axes, wire_axis, bits, backend, chunk_sweep=True):
     w = int(np.prod(shape))
     mesh = make_mesh_auto(shape, axes)
     lay = GC.bucket_layout(_trees(0, w)[0], GROUP)
     spec = P(axes if len(axes) > 1 else axes[0])
 
-    def make_wire(collective):
+    def make_wire(collective, chunks=None):
         def wire_fn(v, err, key):
+            kw = {} if chunks is None else {"chunks": chunks}
             mean, new_err = collective(
                 v[0], err[0], wire_axis, bits, key,
-                stochastic=True, backend=backend)
+                stochastic=True, backend=backend, **kw)
             return mean[None], new_err[None]
         return jax.jit(shard_map(wire_fn, mesh, (spec, spec, P()),
                                  (spec, spec)))
@@ -77,6 +85,21 @@ def run_case(shape, axes, wire_axis, bits, backend):
     wire_psum = make_wire(C.ef_psum_mean_bucket)
     wire_ring = make_wire(C.ring_ef_reduce_mean_bucket)
     wire_shrd = make_wire(C.ring_ef_reduce_scatter_bucket)
+
+    seg0 = C.ring_segment_rows(lay.rows, w)
+    if chunk_sweep:
+        # K in {1, 2, 4} plus one ragged K (seg % K != 0) — K=1 pins
+        # the chunked path's degenerate form against the old code
+        ragged = next((kk for kk in range(2, seg0 + 1) if seg0 % kk),
+                      None)
+        Ks = sorted({k for k in (1, 2, 4, ragged)
+                     if k is not None and k <= seg0})
+    else:
+        Ks = []
+    wires_ck = {k: (make_wire(C.ring_ef_reduce_mean_bucket, chunks=k),
+                    make_wire(C.ring_ef_reduce_scatter_bucket,
+                              chunks=k))
+                for k in Ks}
 
     @jax.jit
     def sim(trees, err, key):
@@ -96,6 +119,9 @@ def run_case(shape, axes, wire_axis, bits, backend):
     err_z = jnp.zeros((w, lay.rows, lay.group_d))
     err_s = jnp.zeros((w, lay.rows, lay.group_d))
     err_zs = jnp.zeros((w, lay.rows, lay.group_d))
+    err_ck = {k: (jnp.zeros((w, lay.rows, lay.group_d)),
+                  jnp.zeros((w, lay.rows, lay.group_d)))
+              for k in Ks}
     for step in range(3):
         trees = _trees(step, w)
         v = jnp.stack([GC.flatten_bucket(t, lay) for t in trees])
@@ -146,6 +172,22 @@ def run_case(shape, axes, wire_axis, bits, backend):
         np.testing.assert_array_equal(sg, np.asarray(segs_zs))
         np.testing.assert_array_equal(np.asarray(err_z),
                                       np.asarray(err_zs))
+        # chunked double-buffered schedule: BIT-IDENTICAL to the
+        # monolithic wires for every K — means, owned segments, and
+        # telescoped error states (the chunked path is scheduling only)
+        for k, (wr_k, ws_k) in wires_ck.items():
+            er_k, ez_k = err_ck[k]
+            means_k, er_k = wr_k(v, er_k, key)
+            segs_k, ez_k = ws_k(v, ez_k, key)
+            err_ck[k] = (er_k, ez_k)
+            np.testing.assert_array_equal(np.asarray(means_k),
+                                          np.asarray(means_r))
+            np.testing.assert_array_equal(np.asarray(er_k),
+                                          np.asarray(err_r))
+            np.testing.assert_array_equal(np.asarray(segs_k),
+                                          np.asarray(segs_z))
+            np.testing.assert_array_equal(np.asarray(ez_k),
+                                          np.asarray(err_z))
 
 
 def main():
@@ -153,7 +195,11 @@ def main():
         cases = [(4, "reference"), (4, "pallas"), (8, "reference"),
                  (8, "pallas")] if full else [(4, "reference")]
         for bits, backend in cases:
-            run_case(shape, axes, wire_axis, bits, backend)
+            # full-matrix meshes sweep chunked Ks at bits=4 only (both
+            # backends); single-combo meshes always sweep — bounds
+            # compile time without losing ragged-ring K coverage
+            run_case(shape, axes, wire_axis, bits, backend,
+                     chunk_sweep=(bits == 4 or not full))
             print(f"OK mesh={shape} bits={bits} backend={backend}")
     # one pallas spot-check on a non-power-of-two ring (sw=16 sum pack)
     run_case((3,), ("d",), "d", 8, "pallas")

@@ -12,7 +12,10 @@ DP wire automatically enrolls it in the byte regression; a wire
 cannot land without a pinned byte model (the completeness assertions
 live in tests/test_hlo_cost.py; this worker only measures — a
 subprocess because the host device count must be set before JAX
-initializes).
+initializes).  Chunkable wires are additionally compiled at
+``chunks`` in {2, 3, 4} (3 is ragged at seg=32): the chunked
+double-buffered schedule must put EXACTLY the monolithic model's
+bytes on the wire — K slices of the same payload, not K payloads.
 
 Serving planes ride the same harness: the delta decode hop compiles as
 a real collective-permute crossing (collective bytes vs the
@@ -45,14 +48,15 @@ HOP_B, HOP_D = 8, 256
 KV_B, KV_S, KV_HK, KV_HD = 2, 16, 2, 64
 
 
-def measure(spec, bits):
+def measure(spec, bits, chunks=None):
     mesh = make_mesh_auto((N,), ("d",))
     pspec = P("d")
 
     def wire_fn(v, err, key):
+        kw = {} if chunks is None else {"chunks": chunks}
         out, new_err = spec.collective(v[0], err[0], "d", bits, key,
                                        stochastic=False,
-                                       backend="reference")
+                                       backend="reference", **kw)
         return out[None], new_err[None]
 
     fn = shard_map(wire_fn, mesh, (pspec, pspec, P()), (pspec, pspec))
@@ -133,6 +137,15 @@ def main():
         row["sharded"] = row["ring-sharded"]
         row["model_sharded"] = row["model_ring-sharded"]
         row["model"] = row["model_ring"]
+        # chunked schedules of every chunkable wire: the measured HLO
+        # collective bytes must stay EXACTLY the monolithic model —
+        # chunking moves the same payload in K slices (K=3 is ragged
+        # at seg=32).  Keyed separately from the wire list so the
+        # registry set-equality pin stays on wire names.
+        row["chunked"] = {
+            name: {str(k): measure(W.get_wire(name), bits, chunks=k)
+                   for k in (2, 3, 4)}
+            for name in names if W.get_wire(name).chunkable}
         out["bits"][str(bits)] = row
     print("HLOWIRE " + json.dumps(out))
 

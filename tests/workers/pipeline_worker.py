@@ -27,17 +27,20 @@ from repro.training import pipeline as PL
 
 
 def build(arch, mode, *, num_layers=None, warmup=False, M=2, Bg=4, S=32,
-          lr=0.0, buffer_bits=0, dp_grad_bits=0, dp_wire="ring"):
+          lr=0.0, buffer_bits=0, dp_grad_bits=0, dp_wire="ring",
+          dp_chunks=1):
     cfg = get_config(arch, smoke=True)
     if num_layers:
         cfg = cfg.with_(num_layers=num_layers)
     mesh = make_debug_mesh(2, 2)
+    comm = CommConfig.from_legacy(
+        CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
+        buffer_bits=buffer_bits, dp_grad_bits=dp_grad_bits,
+        dp_wire=dp_wire)
+    if dp_chunks != 1:
+        comm = comm.with_(dp=comm.dp.with_(chunks=dp_chunks))
     pcfg = PL.PipelineConfig(
-        microbatches=M, warmup=warmup, remat=True,
-        comm=CommConfig.from_legacy(
-            CompressionConfig(mode=mode, fw_bits=4, bw_bits=8),
-            buffer_bits=buffer_bits, dp_grad_bits=dp_grad_bits,
-            dp_wire=dp_wire))
+        microbatches=M, warmup=warmup, remat=True, comm=comm)
     step, meta = PL.make_train_step(
         cfg, pcfg, mesh, AdamWConfig(lr=lr, warmup_steps=1,
                                      schedule="constant"),
@@ -194,6 +197,9 @@ def check_dp_wire_parity():
     * ``psum`` vs ``ring`` — bit-identical losses at every step (the
       programs differ only inside the collective; int32 code sums are
       exact in any order);
+    * chunked ``ring`` / ``ring-sharded`` (``dp.chunks=2``, the
+      double-buffered schedule) — bit-identical losses to their
+      monolithic forms at every step (chunking is scheduling only);
     * ``ring`` vs ``ring-sharded`` — bit-identical losses while the
       trajectories coincide (first steps), then tracking at ulp level:
       the sharded program replaces the pjit-level per-leaf AdamW with
@@ -208,17 +214,24 @@ def check_dp_wire_parity():
     wire ships a 2x gradient bucket on meshes with model > 1 and the
     sharded trajectory separates immediately and grossly."""
     runs = {}
-    for wire in ("psum", "ring", "ring-sharded"):
+    for wire, chunks in (("psum", 1), ("ring", 1), ("ring-sharded", 1),
+                         ("ring", 2), ("ring-sharded", 2)):
         cfg, step, state, batch = build(
             "gpt2-xl-paper", "aqsgd", num_layers=4, warmup=False,
-            lr=1e-3, dp_grad_bits=4, dp_wire=wire)
+            lr=1e-3, dp_grad_bits=4, dp_wire=wire, dp_chunks=chunks)
         key = jax.random.PRNGKey(3)
         losses = []
         for i in range(4):
             state, met = step(state, batch, jax.random.fold_in(key, i))
             losses.append(float(met["loss"]))
-        runs[wire] = losses
+        runs[wire if chunks == 1 else f"{wire}/K{chunks}"] = losses
     assert runs["psum"] == runs["ring"], (runs["psum"], runs["ring"])
+    # the chunked double-buffered schedule is scheduling only: losses
+    # bit-identical to the monolithic wires at every step
+    assert runs["ring/K2"] == runs["ring"], \
+        (runs["ring/K2"], runs["ring"])
+    assert runs["ring-sharded/K2"] == runs["ring-sharded"], \
+        (runs["ring-sharded/K2"], runs["ring-sharded"])
     # sharded: exact while trajectories coincide, tight thereafter
     assert runs["ring-sharded"][:2] == runs["ring"][:2], \
         (runs["ring-sharded"], runs["ring"])

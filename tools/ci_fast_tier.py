@@ -1,0 +1,105 @@
+"""CI fast-tier runner: timing artifact + one-retry flake detector.
+
+Runs the fast tier (``-m "not slow"``) exactly as CI always has, plus:
+
+* ``--durations=25`` timing output is teed to
+  ``ci_fast_tier_durations.txt`` (uploaded as a workflow artifact, so
+  slow-creep in the fast tier is visible across runs without rerunning
+  anything locally);
+* failures are retried ONCE, individually, and the job FAILS EITHER
+  WAY — a rerun that diverges from the first run (pass on retry) is a
+  flake, which is itself a bug in a suite whose whole value is
+  bit-parity gating, so it is reported loudly (``FLAKE DETECTED``)
+  instead of being retried into silence; a rerun that fails again is a
+  genuine failure and reports as such.
+
+The failed-test list comes from the junit XML report (CI disables the
+pytest cache with ``-p no:cacheprovider``, so ``--last-failed`` is not
+available — the XML is also uploaded, giving the artifact a
+machine-readable test list).
+
+Usage: ``python tools/ci_fast_tier.py [extra pytest args...]``
+Exit status: 0 iff the first full run passes.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import xml.etree.ElementTree as ET
+
+DURATIONS_PATH = "ci_fast_tier_durations.txt"
+JUNIT_PATH = "ci_fast_tier_junit.xml"
+
+
+def run_fast_tier(extra: list[str]) -> int:
+    """One full fast-tier run with timing + junit artifacts; returns
+    the pytest exit code (stdout is streamed AND teed to the timing
+    artifact)."""
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "not slow",
+           "-p", "no:cacheprovider", "--durations=25",
+           f"--junitxml={JUNIT_PATH}",
+           # xunit1 records each testcase's file= path — the reliable
+           # node-id source (xunit2's classname mangles directories)
+           "-o", "junit_family=xunit1"] + extra
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    with open(DURATIONS_PATH, "w") as tee:
+        for line in proc.stdout:
+            sys.stdout.write(line)
+            tee.write(line)
+    return proc.wait()
+
+
+def failed_node_ids(junit_path: str = JUNIT_PATH) -> list[str]:
+    """Node ids of failed/errored tests from the junit XML report (the
+    cacheprovider is disabled in CI, so --last-failed cannot supply
+    this list)."""
+    try:
+        root = ET.parse(junit_path).getroot()
+    except (ET.ParseError, FileNotFoundError):
+        return []
+    ids = []
+    for case in root.iter("testcase"):
+        if case.find("failure") is not None \
+                or case.find("error") is not None:
+            path = case.get("file", "")
+            if not path:
+                cls = case.get("classname", "")
+                path = cls.replace(".", "/") + ".py" if cls else ""
+            name = case.get("name")
+            ids.append(f"{path}::{name}" if path else name)
+    return ids
+
+
+def retry_once(node_ids: list[str]) -> int:
+    """Rerun the failed tests once; returns the rerun's exit code."""
+    cmd = [sys.executable, "-m", "pytest", "-q",
+           "-p", "no:cacheprovider"] + node_ids
+    return subprocess.call(cmd)
+
+
+def main() -> int:
+    rc = run_fast_tier(sys.argv[1:])
+    if rc == 0:
+        return 0
+    failed = failed_node_ids()
+    if not failed:
+        # collection error or crash before any report — nothing to
+        # retry, the first run's status stands
+        print(f"ci_fast_tier: run failed (rc={rc}) with no junit "
+              f"failure records; not retrying")
+        return rc
+    print(f"ci_fast_tier: {len(failed)} failure(s); retrying once to "
+          f"classify genuine-vs-flake: {' '.join(failed)}")
+    rerun_rc = retry_once(failed)
+    if rerun_rc == 0:
+        print("ci_fast_tier: FLAKE DETECTED — the failing tests "
+              "passed on an identical rerun.  A parity suite that "
+              "flakes is broken; failing the job.")
+    else:
+        print("ci_fast_tier: failures reproduced on rerun (genuine).")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
