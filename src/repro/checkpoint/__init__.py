@@ -1,0 +1,31 @@
+"""Versioned full-state checkpointing (manifest + checksums).
+
+Public surface re-exported from `repro.checkpoint.checkpoint`: the
+legacy single-file `save`/`restore` pair (params-only export) and the
+manifest-based `save_state`/`restore_state` subsystem with
+`latest_step`/`checkpoint_steps` discovery and `clean_orphans`
+crash-residue cleanup.  See the submodule docstring for the on-disk
+layout and the crash-safety / fail-closed verification protocol.
+"""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    ARRAYS_NAME,
+    MANIFEST_NAME,
+    CheckpointError,
+    checkpoint_steps,
+    clean_orphans,
+    flatten_tree,
+    latest_step,
+    resolve_checkpoint,
+    restore,
+    restore_state,
+    save,
+    save_state,
+    tree_fingerprint,
+)
+
+__all__ = [
+    "ARRAYS_NAME", "MANIFEST_NAME", "CheckpointError",
+    "checkpoint_steps", "clean_orphans", "flatten_tree", "latest_step",
+    "resolve_checkpoint", "restore", "restore_state", "save",
+    "save_state", "tree_fingerprint",
+]

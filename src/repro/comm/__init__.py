@@ -1,6 +1,6 @@
 """`repro.comm` — the single API for every inter-machine byte.
 
-Three pieces (see each submodule's docstring):
+Four pieces (see each submodule's docstring):
 
 * `repro.comm.codec`  — `Codec`: one plane's quantize/pack codec
   bound to its (bits, stochastic, backend) knobs;
@@ -9,20 +9,29 @@ Three pieces (see each submodule's docstring):
   ``wire_bytes()`` accounting every byte report sources;
 * `repro.comm.config` — `CommConfig`: per-plane sub-configs for the
   fw-activation / bw-gradient / z-buffer / dp-grad planes, with JSON
-  and flat-CLI serialization.
+  and flat-CLI serialization;
+* `repro.comm.faults` — deterministic fault injection (`FaultPlan`,
+  internal wrapper wires) and the payload guards
+  (`check_train_state`, `WireFaultError`) the recovery loop and the
+  serving batcher consume.
 
 `training/pipeline.py`, `training/simulated.py` and `launch/train.py`
 consume this package; new wires land as registry entries, not trainer
-surgery (the ``fp16`` DP passthrough is the in-tree example).
+surgery (the ``fp16`` DP passthrough is the in-tree example, and the
+fault wrappers reuse the same mechanism as internal wires).
 """
 from repro.comm.codec import Codec
 from repro.comm.config import (CommConfig, PlaneConfig, add_cli_args,
                                from_args)
+from repro.comm.faults import (FaultPlan, FaultSpec, WireFaultError,
+                               check_train_state, fault_wire,
+                               faulted_comm)
 from repro.comm.wires import (PLANES, WireSpec, get_wire, list_wires,
                               register_wire, wire_names)
 
 __all__ = [
-    "Codec", "CommConfig", "PlaneConfig", "PLANES", "WireSpec",
-    "add_cli_args", "from_args", "get_wire", "list_wires",
-    "register_wire", "wire_names",
+    "Codec", "CommConfig", "FaultPlan", "FaultSpec", "PlaneConfig",
+    "PLANES", "WireFaultError", "WireSpec", "add_cli_args",
+    "check_train_state", "fault_wire", "faulted_comm", "from_args",
+    "get_wire", "list_wires", "register_wire", "wire_names",
 ]

@@ -1,0 +1,454 @@
+"""Deterministic fault injection + payload guards for every plane.
+
+The paper's setting (slow, decentralized, preemptible networks) makes
+corrupt payloads a WHEN, not an IF — and stateful compression makes
+them worse: a NaN that reaches the `dp_error` EF carry or the AQ-SGD
+message buffers poisons every later step through the telescoping sum.
+This module provides both halves of the defense:
+
+**Injection** — a :class:`FaultPlan` of ``(step, plane, kind)``
+coordinates, parsed from the CLI (``--fault 3:dp:nan-scale``).  Three
+kinds, each the post-decode effect of a real wire failure:
+
+* ``corrupt-codes`` — garbage packed codes: the decoded payload turns
+  into huge finite values (±1e32);
+* ``nan-scale``     — a NaN/Inf row scale: the decode is NaN;
+* ``drop-hop``      — a zeroed ppermute hop: the payload is silently
+  all-zero (finite AND small — the nasty one).
+
+DP faults use the registry pattern itself: `fault_wire` registers an
+INTERNAL wrapper wire (``ring+fault-nan-scale``) whose collective /
+simulator delegate to the base wire and corrupt the decoded mean, and
+`faulted_comm` swaps it into ``comm.dp.wire`` for exactly the fault
+step.  Because the trainer configs hash the wire NAME, the fault step
+compiles its own executable and every clean step reuses the original
+one — injection cannot perturb clean-step bits.  fw / bw / zbuf
+faults corrupt the carried state between steps (`inject_sim_state`);
+kv faults poison one serving slot (`serving.batcher`).
+
+**Guards** — two layers, because XLA cannot raise mid-graph:
+
+* in-graph: `guard_dp_pair` NaN-poisons the decoded DP mean AND the
+  EF carry when the mean is non-finite, implausibly huge
+  (> ``GUARD_MAX``), or all-zero (the drop-hop sentinel).  On clean
+  payloads the ``where`` selects the input elementwise — bit-exact,
+  so every bit-parity gate in the suite is unaffected;
+* host-side: `check_train_state` scans the post-step state and raises
+  a structured :class:`WireFaultError` naming plane, wire, and step.
+  Attribution is by which state a plane can reach, in dependency
+  order: message buffers → zbuf if ``zbuf.bits`` else fw (written
+  from the forward pass, unreachable by a later DP decode);
+  ``dp_error`` → dp; params / opt / loss → bw if ``bw.bits`` else dp
+  if ``dp.bits`` else fw.
+
+`launch.runner` catches the error and replays from the last good
+checkpoint (bounded retries); `serving.batcher` evicts the poisoned
+slot via `slot_flags` while vmapped row independence keeps the
+surviving slots bit-identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wires as W
+
+FAULT_KINDS = ("corrupt-codes", "nan-scale", "drop-hop")
+# drop-hop's zero sentinel only works where an all-zero payload is
+# implausible: the DP gradient mean and the seen rows of the message
+# buffers.  bw gradients and kv cache rows can be legitimately zero.
+ALLOWED_KINDS = {
+    "dp": FAULT_KINDS, "fw": FAULT_KINDS, "zbuf": FAULT_KINDS,
+    "bw": ("corrupt-codes", "nan-scale"),
+    "kv": ("corrupt-codes", "nan-scale"),
+}
+GUARD_MAX = 1e30   # |value| above this is declared corrupt: far above
+                   # any trained tensor, far below corrupt-codes' 1e32
+
+
+class WireFaultError(RuntimeError):
+    """A guard detected a corrupt payload.  Carries the structured
+    coordinates (``plane``, ``wire``, ``step``, ``detail``) so the
+    recovery loop and the tests can assert on WHAT was caught, not
+    just that something raised."""
+
+    def __init__(self, *, plane: str, wire: str, step: int,
+                 detail: str):
+        self.plane, self.wire = plane, wire
+        self.step, self.detail = step, detail
+        super().__init__(f"wire fault detected: plane={plane} "
+                         f"wire={wire!r} step={step}: {detail}")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One injected fault: at training step ``step`` (0-based; for the
+    kv plane, the batcher tick), on ``plane`` (a `CommConfig` plane
+    field name: fw/bw/zbuf/dp/kv), of ``kind`` (`FAULT_KINDS`)."""
+    step: int
+    plane: str
+    kind: str
+
+    def __post_init__(self):
+        if self.plane not in ALLOWED_KINDS:
+            raise ValueError(f"unknown fault plane {self.plane!r}; "
+                             f"one of {sorted(ALLOWED_KINDS)}")
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+        if self.kind not in ALLOWED_KINDS[self.plane]:
+            raise ValueError(
+                f"kind {self.kind!r} is not injectable on plane "
+                f"{self.plane!r} (an all-zero payload is legitimate "
+                f"there); allowed: {ALLOWED_KINDS[self.plane]}")
+        if self.step < 0:
+            raise ValueError(f"fault step {self.step} < 0")
+
+    def text(self) -> str:
+        """The ``step:plane:kind`` CLI token for this fault."""
+        return f"{self.step}:{self.plane}:{self.kind}"
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of injected faults (possibly empty).
+    Built from CLI text by `parse`; queried per step by `at`."""
+    faults: tuple = ()
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultPlan":
+        """Parse ``step:plane:kind[,step:plane:kind...]`` (the
+        ``--fault`` flag).  Empty text = no faults.  Bad tokens raise
+        with the expected grammar."""
+        faults = []
+        for tok in filter(None, (t.strip() for t in text.split(","))):
+            parts = tok.split(":")
+            if len(parts) != 3 or not parts[0].lstrip("-").isdigit():
+                raise ValueError(
+                    f"bad fault token {tok!r}: expected "
+                    f"step:plane:kind, e.g. 3:dp:nan-scale")
+            faults.append(FaultSpec(step=int(parts[0]), plane=parts[1],
+                                    kind=parts[2]))
+        return cls(faults=tuple(faults))
+
+    def at(self, step: int, plane: Optional[str] = None) -> list:
+        """The faults scheduled for ``step`` (optionally one plane)."""
+        return [f for f in self.faults if f.step == step
+                and (plane is None or f.plane == plane)]
+
+    def text(self) -> str:
+        """The CLI form (inverse of `parse`)."""
+        return ",".join(f.text() for f in self.faults)
+
+    def __bool__(self):
+        return bool(self.faults)
+
+
+# ---------------------------------------------------------------------------
+# corruption patterns (the post-decode effect of each fault kind)
+# ---------------------------------------------------------------------------
+
+def _is_float(x) -> bool:
+    """True for float/complex dtypes INCLUDING the ml_dtypes extended
+    floats (bf16/f8 — numpy kind 'V', so a kind check misses them)."""
+    try:
+        return bool(jnp.issubdtype(x.dtype, jnp.floating)
+                    or jnp.issubdtype(x.dtype, jnp.complexfloating))
+    except (AttributeError, TypeError):
+        return False
+
+
+def corrupt_array(x, kind: str):
+    """The ``kind``-corrupted version of a float array (int/bool
+    arrays return unchanged — codes corruption is modeled post-decode
+    on the float payload).  Deterministic, shape/dtype-preserving."""
+    if not _is_float(x):
+        return x
+    if kind == "corrupt-codes":
+        sign = (jnp.arange(x.size) % 2 * (-2) + 1).reshape(x.shape)
+        return (sign * 1e32).astype(x.dtype)
+    if kind == "nan-scale":
+        return jnp.full_like(x, jnp.nan)
+    if kind == "drop-hop":
+        return jnp.zeros_like(x)
+    raise ValueError(f"unknown fault kind {kind!r}")
+
+
+def corrupt_tree(tree, kind: str):
+    """`corrupt_array` over every float leaf of a pytree."""
+    return jax.tree_util.tree_map(lambda l: corrupt_array(l, kind),
+                                  tree)
+
+
+# ---------------------------------------------------------------------------
+# DP plane: internal wrapper wires (the registry pattern itself)
+# ---------------------------------------------------------------------------
+
+def fault_wire(base: str, kind: str) -> str:
+    """Ensure the internal DP wrapper wire ``<base>+fault-<kind>`` is
+    registered and return its name.  The wrapper delegates to the base
+    wire's collective / simulator and corrupts the DECODED MEAN on the
+    way out (the EF carry passes through — the guard poisons it).  It
+    copies the base spec's flags (sharded/chunkable/psum_lowered/byte
+    model) so `CommConfig` validation and chunk checks still hold, and
+    registers ``internal=True`` so enumeration (CLI choices,
+    ``--list-wires``, registry-completeness gates) never sees it.
+
+    Swapping this name into ``comm.dp.wire`` for ONE step is the whole
+    injection mechanism: trainer configs hash the wire name, so the
+    fault step gets its own jit executable and clean steps keep the
+    original — injection cannot perturb clean-step bits."""
+    if kind not in FAULT_KINDS:
+        raise ValueError(f"unknown fault kind {kind!r}")
+    name = f"{base}+fault-{kind}"
+    try:
+        W.get_wire(name)
+        return name
+    except ValueError:
+        pass
+    spec = W.get_wire(base)
+
+    def collective(v_grad, err, axis_name, bits, key, **kw):
+        mean, new_err = spec.collective(v_grad, err, axis_name, bits,
+                                        key, **kw)
+        return corrupt_tree(mean, kind), new_err
+
+    def sim_allreduce(grads_list, error_state, bits, key, **kw):
+        out, new_err = spec.sim_allreduce(grads_list, error_state,
+                                          bits, key, **kw)
+        return corrupt_tree(out, kind), new_err
+
+    W.register_wire(
+        name, plane="dp-grad", internal=True,
+        summary=f"FAULT-INJECTION wrapper: {base} with {kind} "
+                f"corruption on the decoded mean (harness-only)",
+        wire_bytes=spec.wire_bytes, collective=collective,
+        sim_allreduce=sim_allreduce, sharded=spec.sharded,
+        chunkable=spec.chunkable, psum_lowered=spec.psum_lowered)
+    return name
+
+
+def faulted_comm(comm, spec: FaultSpec):
+    """``comm`` with the DP wire swapped for its fault wrapper (only
+    meaningful for ``spec.plane == 'dp'``; other planes inject via
+    `inject_sim_state` / the batcher)."""
+    assert spec.plane == "dp", spec
+    if not comm.dp.bits:
+        raise ValueError("a dp fault needs dp.bits > 0 (the DP plane "
+                         "is off)")
+    return comm.with_(dp=comm.dp.with_(
+        wire=fault_wire(comm.dp.wire, spec.kind)))
+
+
+# ---------------------------------------------------------------------------
+# fw / bw / zbuf planes: host-state injection between steps
+# ---------------------------------------------------------------------------
+
+def inject_sim_state(state: dict, spec: FaultSpec, comm) -> dict:
+    """Corrupt the carried train state with the post-decode effect of
+    ``spec``:
+
+    * fw / zbuf (runner applies BEFORE the fault step): the stored
+      message payload of boundary 0 (``m`` for raw buffers, ``scale``
+      for z-bit quantized ones); ``drop-hop`` zeroes the payload
+      while leaving ``seen`` rows marked, which is exactly the
+      all-zero-seen-row sentinel the guard checks;
+    * bw (runner applies AFTER the fault step, matching the real
+      timing — a corrupt backward hop lands in the parameters at the
+      update, after the forward already wrote clean messages): the
+      first float leaf of ``params``;
+    * dp: handled by `faulted_comm` (wire swap), not here.
+    """
+    if spec.plane == "dp":
+        raise ValueError("dp faults inject via faulted_comm (wire "
+                         "swap), not state corruption")
+    state = dict(state)
+    if spec.plane in ("fw", "zbuf"):
+        bufs = dict(state["buffers"])
+        payload = "m" if "m" in bufs else "scale"
+        arrs = list(bufs[payload])
+        if spec.kind == "drop-hop" and "codes" in bufs:
+            codes = list(bufs["codes"])
+            codes[0] = jnp.zeros_like(codes[0])
+            bufs["codes"] = _restack(bufs["codes"], codes)
+        arrs[0] = corrupt_array(arrs[0], spec.kind)
+        bufs[payload] = _restack(bufs[payload], arrs)
+        state["buffers"] = bufs
+    elif spec.plane == "bw":
+        leaves, treedef = jax.tree_util.tree_flatten(state["params"])
+        for i, leaf in enumerate(leaves):
+            if _is_float(leaf):
+                leaves[i] = corrupt_array(leaf, spec.kind)
+                break
+        state["params"] = jax.tree_util.tree_unflatten(treedef, leaves)
+    else:
+        raise ValueError(f"plane {spec.plane!r} does not inject into "
+                         f"train state")
+    return state
+
+
+def _restack(original, arrs: list):
+    """Rebuild the boundary-stacked container ``original`` (an array
+    stacked on axis 0, or a list/tuple of per-boundary arrays) from
+    the edited per-boundary list."""
+    if isinstance(original, (list, tuple)):
+        return type(original)(arrs)
+    return jnp.stack(arrs)
+
+
+# ---------------------------------------------------------------------------
+# in-graph guard (XLA cannot raise: poison to NaN, host raises later)
+# ---------------------------------------------------------------------------
+
+def guard_dp_pair(grads, new_err, *, expect_nonzero: bool = True):
+    """In-graph guard on the decoded DP mean: if any float leaf of
+    ``grads`` is non-finite or ``> GUARD_MAX``, or (with
+    ``expect_nonzero``, the default) the WHOLE tree is all-zero (a
+    dropped hop — a legitimate full gradient mean is never identically
+    zero), NaN-poison both ``grads`` and the EF carry ``new_err`` so
+    the host-side `check_train_state` attributes the fault to the dp
+    plane.  ``expect_nonzero=False`` is for per-device SEGMENTS of the
+    ZeRO wire, where a small model can leave one rank's segment
+    entirely padding rows — legitimately zero.  On clean payloads the
+    ``where`` selects the input elementwise — bit-exact, no effect on
+    parity gates."""
+    leaves = [l for l in jax.tree_util.tree_leaves(grads)
+              if _is_float(l)]
+    bad = jnp.zeros((), bool)
+    if expect_nonzero:
+        zero = jnp.ones((), bool)
+        for l in leaves:
+            zero &= jnp.all(l == 0)
+        bad |= zero
+    for l in leaves:
+        bad |= jnp.any(~jnp.isfinite(l) | (jnp.abs(l) > GUARD_MAX))
+
+    def poison(l):
+        if not _is_float(l):
+            return l
+        return jnp.where(bad, jnp.asarray(jnp.nan, l.dtype), l)
+
+    return (jax.tree_util.tree_map(poison, grads),
+            jax.tree_util.tree_map(poison, new_err))
+
+
+# ---------------------------------------------------------------------------
+# host-side guards: scan state, raise structured errors
+# ---------------------------------------------------------------------------
+
+def _arr_detail(a) -> Optional[str]:
+    if not _is_float(a):
+        return None
+    a = np.asarray(a)
+    if a.dtype.kind not in "fc":
+        a = a.astype(np.float32)       # ml_dtypes bf16/f8 (kind 'V')
+    if not a.size:
+        return None
+    if not np.isfinite(a).all():
+        return "non-finite values"
+    if np.abs(a).max() > GUARD_MAX:
+        return f"magnitude above guard bound {GUARD_MAX:g}"
+    return None
+
+
+def _tree_detail(tree) -> Optional[str]:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        d = _arr_detail(leaf)
+        if d:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path) or "<root>"
+            return f"{key}: {d}"
+    return None
+
+
+def _buffers_detail(bufs) -> Optional[str]:
+    """Corruption in the AQ-SGD message buffers: bad float payloads,
+    or the drop-hop sentinel — a SEEN sample whose entire stored
+    message is zero (a real message is a full-precision activation
+    plus deltas; identically zero means the hop was dropped)."""
+    payload = "m" if "m" in bufs else ("scale" if "scale" in bufs
+                                      else None)
+    if payload is None:
+        return None
+    d = _tree_detail({k: v for k, v in bufs.items() if k != "seen"})
+    if d:
+        return d
+    seen = np.asarray(bufs["seen"])
+    for i in range(seen.shape[0]):
+        rows = np.flatnonzero(seen[i])
+        if not rows.size:
+            continue
+        m = np.asarray(bufs[payload][i])[rows]
+        zero = ~np.any(m.reshape(m.shape[0], -1) != 0, axis=1)
+        if zero.any():
+            return (f"boundary {i}: {int(zero.sum())} seen sample(s) "
+                    f"with an all-zero stored message (dropped hop)")
+    return None
+
+
+def check_train_state(state: dict, *, comm, step: int,
+                      loss=None) -> None:
+    """Raise :class:`WireFaultError` if the post-step train state (or
+    the step loss) carries a corrupt payload; return None when clean.
+
+    Attribution is by which state each plane can reach, checked in
+    dependency order (module docstring).  The message buffers come
+    FIRST: they are written from the forward pass, so a corrupt DP
+    decode (which happens after) can never contaminate them — clean
+    buffers + bad ``dp_error`` is unambiguously a dp fault, while bad
+    buffers point at the fw codec (stored at zbuf width when
+    ``zbuf.bits``).  params / opt / loss are reachable by everything
+    upstream and are attributed to the widest-reach compressed
+    plane."""
+    if "buffers" in state and comm.mode == "aqsgd":
+        d = _buffers_detail(state["buffers"])
+        if d:
+            plane = "zbuf" if comm.zbuf.bits else "fw"
+            raise WireFaultError(
+                plane=plane, wire=getattr(comm, plane).wire, step=step,
+                detail=f"message buffers: {d}")
+    if "dp_error" in state:
+        d = _tree_detail(state["dp_error"])
+        if d:
+            raise WireFaultError(plane="dp", wire=comm.dp.wire,
+                                 step=step, detail=f"dp_error {d}")
+    blame = "bw" if comm.bw.bits else ("dp" if comm.dp.bits else "fw")
+    for name in ("params", "opt"):
+        if name in state:
+            d = _tree_detail(state[name])
+            if d:
+                raise WireFaultError(
+                    plane=blame, wire=getattr(comm, blame).wire,
+                    step=step, detail=f"{name} {d}")
+    if loss is not None:
+        d = _arr_detail(np.asarray(loss, dtype=np.float64))
+        if d:
+            raise WireFaultError(plane=blame,
+                                 wire=getattr(comm, blame).wire,
+                                 step=step, detail=f"loss {d}")
+
+
+def slot_flags(pool: dict) -> np.ndarray:
+    """Per-slot corruption flags for the serving batcher's pool (slot
+    dim = axis 1 of every stacked leaf; the ``pos`` vector is axis 0).
+    A slot is flagged when ANY of its float payload is non-finite or
+    above ``GUARD_MAX``.  The caller masks with its active set —
+    inactive slots hold stale bytes by design."""
+    num_slots = int(np.asarray(pool["pos"]).shape[0])
+    flags = np.zeros(num_slots, bool)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pool)[0]:
+        if not _is_float(leaf):
+            continue
+        a = np.asarray(leaf)
+        if a.dtype.kind not in "fc":
+            a = a.astype(np.float32)   # ml_dtypes bf16 (kind 'V')
+        if a.ndim < 2 or a.shape[1] != num_slots:
+            continue
+        bad = ~np.isfinite(a) | (np.abs(a) > GUARD_MAX)
+        axes = tuple(i for i in range(a.ndim) if i != 1)
+        flags |= bad.any(axis=axes)
+    return flags

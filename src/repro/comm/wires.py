@@ -73,6 +73,11 @@ class WireSpec:
                                               # models apply a 2x on top
                                               # (ring wires count their
                                               # own hops instead)
+    internal: bool = False                    # hidden from wire_names /
+                                              # list_wires enumeration:
+                                              # harness-owned wrappers
+                                              # (fault injection), not
+                                              # user-selectable wires
 
 
 _REGISTRY: dict[tuple[str, str], WireSpec] = {}
@@ -82,12 +87,17 @@ def register_wire(name: str, *, summary: str, wire_bytes,
                   plane: str = "dp-grad", collective=None,
                   sim_allreduce=None, sharded: bool = False,
                   network: bool = True, chunkable: bool = False,
-                  psum_lowered: bool = False) -> WireSpec:
+                  psum_lowered: bool = False,
+                  internal: bool = False) -> WireSpec:
     """Register a wire under ``(plane, name)``; names are unique per
     plane.  Returns the spec (so modules can keep a handle).
     ``chunkable=True`` declares the collective accepts a ``chunks=``
     kwarg (the K-chunk double-buffered schedule) — `CommConfig`
-    validates ``dp.chunks`` against this flag."""
+    validates ``dp.chunks`` against this flag.  ``internal=True``
+    registers a harness-owned wrapper (e.g. `repro.comm.faults` fault
+    wires): resolvable by `get_wire` but hidden from `wire_names` /
+    `list_wires`, so CLI help, ``--list-wires``, and the registry-
+    completeness byte-model gates never see it."""
     assert plane in PLANES, plane
     key = (plane, name)
     if key in _REGISTRY:
@@ -97,7 +107,7 @@ def register_wire(name: str, *, summary: str, wire_bytes,
                     wire_bytes=wire_bytes, collective=collective,
                     sim_allreduce=sim_allreduce, sharded=sharded,
                     network=network, chunkable=chunkable,
-                    psum_lowered=psum_lowered)
+                    psum_lowered=psum_lowered, internal=internal)
     _REGISTRY[key] = spec
     return spec
 
@@ -123,16 +133,23 @@ def get_wire(name: str, plane: str = "dp-grad") -> WireSpec:
     return spec
 
 
-def wire_names(plane: Optional[str] = None) -> list[str]:
+def wire_names(plane: Optional[str] = None, *,
+               include_internal: bool = False) -> list[str]:
     """Registered wire names, registration order (optionally filtered
-    to one plane)."""
-    return [n for (p, n) in _REGISTRY if plane is None or p == plane]
+    to one plane).  Internal wrapper wires (fault injection) are
+    hidden unless ``include_internal=True``."""
+    return [s.name for s in list_wires(plane,
+                                       include_internal=include_internal)]
 
 
-def list_wires(plane: Optional[str] = None) -> list[WireSpec]:
-    """All registered specs, registration order."""
+def list_wires(plane: Optional[str] = None, *,
+               include_internal: bool = False) -> list[WireSpec]:
+    """All registered specs, registration order.  Internal wrapper
+    wires (fault injection) are hidden unless
+    ``include_internal=True``."""
     return [s for (p, _), s in _REGISTRY.items()
-            if plane is None or p == plane]
+            if (plane is None or p == plane)
+            and (include_internal or not s.internal)]
 
 
 # ---------------------------------------------------------------------------

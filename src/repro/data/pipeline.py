@@ -70,8 +70,16 @@ class Dataset:
             self.tokens = _textfile_corpus(dc)
         else:
             raise ValueError(dc.kind)
-        self.rng = np.random.default_rng(dc.seed + 1)
-        self._order = np.arange(dc.num_samples)
+        self.reset()
+
+    def reset(self) -> None:
+        """Rewind the (mutable) shuffle state to step 0: the stream is
+        then a pure function of the config seed again.  Replay-based
+        resume (`launch.runner`) depends on this — `epoch` advances
+        ``self.rng`` in place, so re-calling `batches` WITHOUT a reset
+        yields a different (continued-rng) stream."""
+        self.rng = np.random.default_rng(self.dc.seed + 1)
+        self._order = np.arange(self.dc.num_samples)
 
     @property
     def num_samples(self) -> int:

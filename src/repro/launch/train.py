@@ -67,9 +67,40 @@ def main():
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--data-par", type=int, default=2)
     ap.add_argument("--microbatches", type=int, default=2)
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--checkpoint", default="",
+                    help="legacy params-only .npz export at exit "
+                         "(full-state checkpointing is --ckpt-dir)")
     ap.add_argument("--corpus", default="",
                     help="optional text file to train on (byte-level)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="versioned full-state checkpoint directory "
+                         "(repro.checkpoint manifest subsystem)")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint the FULL train state every N "
+                         "steps (0 = off; needs --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest committed checkpoint "
+                         "in --ckpt-dir (checksums, structure and "
+                         "comm config are verified; the replayed loss "
+                         "stream is bit-identical)")
+    ap.add_argument("--keep", type=int, default=3,
+                    help="keep-last-k checkpoint rotation (0 = keep "
+                         "all)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="bounded fault recovery: reload the last "
+                         "good checkpoint and replay at most this "
+                         "many times")
+    ap.add_argument("--fault", default="",
+                    help="deterministic fault injection plan, "
+                         "step:plane:kind[,...] — e.g. "
+                         "'3:dp:nan-scale,5:fw:drop-hop' (kinds: "
+                         "corrupt-codes, nan-scale, drop-hop; "
+                         "single-host trainer only)")
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="hard-exit (os._exit 17) right after "
+                         "printing step N's loss, before any save — "
+                         "the kill half of the kill-and-resume parity "
+                         "gate (single-host trainer only)")
     args = ap.parse_args()
 
     if args.list_wires:
@@ -93,14 +124,30 @@ def main():
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
                       total_steps=args.steps)
 
+    if args.fault and args.distributed:
+        ap.error("--fault targets the single-host simulated trainer")
+    if args.kill_at is not None and args.distributed:
+        ap.error("--kill-at targets the single-host simulated trainer")
+    if (args.resume or args.save_every or args.fault) \
+            and not args.ckpt_dir:
+        ap.error("--resume/--save-every/--fault need --ckpt-dir")
+
     if not args.distributed:
+        from repro.comm.faults import FaultPlan
+        from repro.launch import runner
         from repro.training import simulated as sim
         tcfg = sim.SimTrainConfig(num_stages=args.stages, comm=comm,
                                   optimizer=opt,
                                   dp_workers=args.dp_workers
                                   if comm.dp.bits else 1)
-        state, losses = sim.train(cfg, tcfg, ds, num_steps=args.steps,
-                                  batch_size=args.batch, log_every=10)
+        state, losses = runner.run_sim_training(
+            cfg, tcfg, ds, num_steps=args.steps,
+            batch_size=args.batch, log_every=10,
+            ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+            keep=args.keep, resume=args.resume,
+            max_retries=args.max_retries,
+            fault_plan=FaultPlan.parse(args.fault),
+            kill_at=args.kill_at)
         print(f"final loss {np.mean(losses[-5:]):.4f}")
         if args.checkpoint:
             ckpt.save(args.checkpoint, state["params"])
@@ -145,10 +192,28 @@ def main():
         state["m_out"] = jax.tree.map(zeros, structs)
         state["m_in"] = jax.tree.map(zeros, structs)
 
+    start = 0
+    if args.ckpt_dir:
+        removed = ckpt.clean_orphans(args.ckpt_dir)
+        if removed:
+            print(f"checkpoint: removed {len(removed)} orphaned tmp "
+                  f"entries")
+    if args.resume:
+        state, body = ckpt.restore_state(args.ckpt_dir,
+                                         jax.eval_shape(lambda: state),
+                                         comm=comm)
+        start = int(body["step"])
+        print(f"resumed from step {start}")
+
     m = args.microbatches
     steps_per_epoch = max(args.samples // gb, 1)
     key = jax.random.PRNGKey(1)
-    for step_i, batch in enumerate(ds.batches(gb, args.steps)):
+    batches = ds.batches(gb, args.steps)
+    for _ in range(start):
+        next(batches)   # the data stream is deterministic: replay by
+                        # skipping to the checkpointed position
+    metrics = None
+    for step_i, batch in enumerate(batches, start=start):
         batch = {k: jnp.asarray(v).reshape(m, gb // m, *v.shape[1:])
                  for k, v in batch.items()}
         fn = step_w if (comm.mode == "aqsgd"
@@ -156,8 +221,16 @@ def main():
                         * args.warmup_epochs) else step_c
         state, metrics = fn(state, batch, jax.random.fold_in(key, step_i))
         if step_i % 10 == 0:
-            print(f"step {step_i:5d} loss {float(metrics['loss']):.4f}")
-    print(f"final loss {float(metrics['loss']):.4f}")
+            loss = float(metrics["loss"])
+            print(f"step {step_i:5d} loss {loss:.4f} [{loss.hex()}]")
+        done = step_i + 1
+        if args.ckpt_dir and args.save_every \
+                and done % args.save_every == 0:
+            ckpt.save_state(args.ckpt_dir, state, step=done, comm=comm,
+                            extra={"data_position": done},
+                            keep=args.keep)
+    if metrics is not None:
+        print(f"final loss {float(metrics['loss']):.4f}")
 
 
 if __name__ == "__main__":

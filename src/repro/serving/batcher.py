@@ -33,6 +33,16 @@ through the delta codec (reference buffers live in the pool as
 
 Decoding is greedy (argmax) — what the fp32-vs-quantized equivalence
 gate in tests/test_serving.py compares token-for-token.
+
+Fault isolation (ISSUE 8): because the pooled step is a `jax.vmap`
+over rows, slots are computationally independent — a poisoned row
+CANNOT leak into its neighbors.  The batcher makes that operational:
+a `repro.comm.faults.FaultPlan` injects kv-plane corruption into one
+active slot's cache at a chosen tick, and the slot guard
+(`faults.slot_flags` over the pool, plus an admission check on every
+prefill row) evicts the poisoned request to ``DONE`` with
+``req.error`` set — surviving slots' token streams stay bit-identical
+to an uninjected run (gated by tests/test_faults.py).
 """
 from __future__ import annotations
 
@@ -43,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import faults as F
 from repro.models import model as Mo
 from repro.serving.delta import DeltaHopCodec
 from repro.serving.kvcache import KVCodec, quantize_caches
@@ -52,12 +63,16 @@ PENDING, ACTIVE, DONE = "PENDING", "ACTIVE", "DONE"
 
 @dataclasses.dataclass
 class ServeRequest:
-    """One prompt in flight; ``tokens`` accumulates greedy output."""
+    """One prompt in flight; ``tokens`` accumulates greedy output.
+    ``error`` is empty for a clean completion; a request evicted by
+    the slot guard lands in ``DONE`` with the structured fault text
+    (plane/wire/tick) here instead of poisoning its neighbors."""
     prompt: list
     max_new_tokens: int = 16
     tokens: list = dataclasses.field(default_factory=list)
     state: str = PENDING
     slot: int = -1
+    error: str = ""
 
 
 class ContinuousBatcher:
@@ -65,19 +80,30 @@ class ContinuousBatcher:
 
     ``kv_codec``/``hop_codec``/``num_stages`` default to the
     uncompressed single-stage baseline; ``eos_id=None`` disables EOS
-    eviction (requests run to ``max_new_tokens``)."""
+    eviction (requests run to ``max_new_tokens``).
+
+    ``fault_plan`` schedules kv-plane injections by batcher tick (the
+    `FaultSpec.step` coordinate); ``guard`` turns the per-tick slot
+    scan + admission check on (defaults on exactly when a plan is
+    given — the scan costs a host gather of the pool per tick)."""
 
     def __init__(self, params, cfg, *, num_slots: int, cache_len: int,
                  kv_codec: Optional[KVCodec] = None,
                  hop_codec: Optional[DeltaHopCodec] = None,
                  num_stages: int = 1, block_k: int = 512,
-                 eos_id: Optional[int] = None, dtype=jnp.bfloat16):
+                 eos_id: Optional[int] = None, dtype=jnp.bfloat16,
+                 fault_plan: Optional[F.FaultPlan] = None,
+                 guard: Optional[bool] = None):
         self.params, self.cfg = params, cfg
         self.num_slots, self.cache_len = num_slots, cache_len
         self.kv_codec = kv_codec if (kv_codec and kv_codec.bits) else None
         self.hop_codec = hop_codec
         self.num_stages = num_stages
         self.block_k, self.eos_id, self.dtype = block_k, eos_id, dtype
+        self.fault_plan = fault_plan or F.FaultPlan()
+        self.guard = bool(self.fault_plan) if guard is None else guard
+        self._tick = 0
+        self._fired: set = set()
         self.requests: list[ServeRequest] = []
         self._slots: list[Optional[ServeRequest]] = [None] * num_slots
         self._next_tok = np.zeros((num_slots,), np.int32)
@@ -164,6 +190,12 @@ class ContinuousBatcher:
                 self.caches[name] = \
                     self.caches[name].at[:, i].set(leaf[:, 0])
 
+    def _row_bad(self, row) -> bool:
+        """Admission guard: is this prefill row's float payload
+        corrupt (non-finite or above the guard bound)?"""
+        return any(F._arr_detail(leaf) is not None
+                   for leaf in row.values())
+
     def _admit(self):
         pending = [r for r in self.requests if r.state == PENDING]
         for i, slot in enumerate(self._slots):
@@ -171,6 +203,14 @@ class ContinuousBatcher:
                 continue
             req = pending.pop(0)
             tok, row = self._prefill(np.asarray(req.prompt, np.int32))
+            if self.guard and self._row_bad(row):
+                # poisoned before it ever touched the pool: reject at
+                # admission, never occupy a slot
+                req.state = DONE
+                req.error = (f"wire fault detected: plane=kv "
+                             f"wire='paged' tick={self._tick}: "
+                             f"corrupt prefill payload")
+                continue
             self._write_slot(i, row)
             req.state, req.slot = ACTIVE, i
             self._slots[i] = req
@@ -186,18 +226,60 @@ class ContinuousBatcher:
             self._slots[req.slot] = None
             req.slot = -1
 
+    def _evict_faulted(self, req: ServeRequest, detail: str):
+        """Slot-level isolation: the poisoned request leaves the pool
+        as DONE(error); its row is dead until the next admission
+        overwrites every leaf (`_write_slot` writes the full row)."""
+        req.error = (f"wire fault detected: plane=kv wire='paged' "
+                     f"tick={self._tick}: {detail}")
+        req.state = DONE
+        self._slots[req.slot] = None
+        req.slot = -1
+
+    def _inject_faults(self):
+        """Fire due kv-plane faults into the lowest-index active slot
+        (each spec fires once, at the first due tick with a victim)."""
+        for spec in self.fault_plan.faults:
+            if spec.plane != "kv" or spec in self._fired \
+                    or self._tick < spec.step:
+                continue
+            victims = [i for i, r in enumerate(self._slots)
+                       if r is not None]
+            if not victims:
+                continue       # no active slot yet; retry next tick
+            v = victims[0]
+            self._fired.add(spec)
+            for name in self.caches:
+                leaf = self.caches[name]
+                if name == "pos" or not F._is_float(leaf):
+                    continue
+                self.caches[name] = leaf.at[:, v].set(
+                    F.corrupt_array(leaf[:, v], spec.kind))
+
     # -- drive --------------------------------------------------------------
 
     def step(self):
         """One batched decode tick over every slot (idle rows advance on
-        garbage and are ignored — the price of a static shape)."""
+        garbage and are ignored — the price of a static shape).  With
+        the guard on, the pool is scanned after the decode and any
+        ACTIVE slot carrying corrupt payload is evicted BEFORE its
+        (garbage) token is emitted — `jax.vmap` row independence keeps
+        every surviving slot's stream bit-identical."""
+        self._inject_faults()
         toks, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(self._next_tok))
         toks = np.asarray(toks)
+        flags = F.slot_flags(self.caches) if self.guard \
+            else np.zeros(self.num_slots, bool)
         for i, req in enumerate(self._slots):
             self._next_tok[i] = int(toks[i])
-            if req is not None:
+            if req is None:
+                continue
+            if flags[i]:
+                self._evict_faulted(req, "corrupt cache payload")
+            else:
                 self._emit(req, int(toks[i]))
+        self._tick += 1
 
     def run(self, max_ticks: int = 10_000) -> list:
         """Admit + decode until every submitted request is DONE; returns

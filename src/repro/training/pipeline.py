@@ -81,6 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm import faults as CF
 from repro.comm import wires as CW
 from repro.comm.config import CommConfig, reject_legacy_comm
 from repro.configs.base import ModelConfig
@@ -468,6 +469,9 @@ def make_dp_grad_wire(mesh, comm: CommConfig):
         mean, new_err = spec.collective(
             g2d, e, axis, dpc.bits, key,
             stochastic=dpc.stochastic, backend=dpc.backend, **extra)
+        # payload guard (repro.comm.faults): NaN-poison a corrupt or
+        # dropped-hop decoded mean; bit-exact passthrough when clean
+        mean, new_err = CF.guard_dp_pair(mean, new_err)
         if not dpc.error_feedback:
             new_err = jnp.zeros_like(new_err)
         return mean, new_err[None]
@@ -518,6 +522,10 @@ def make_dp_sharded_update(mesh, comm: CommConfig,
         seg_mean, new_err = spec.collective(
             g2d, e, axis, dpc.bits, key,
             stochastic=dpc.stochastic, backend=dpc.backend, **extra)
+        # expect_nonzero off: a small model can leave this rank's
+        # segment entirely padding rows (legitimately all-zero)
+        seg_mean, new_err = CF.guard_dp_pair(seg_mean, new_err,
+                                             expect_nonzero=False)
         if not dpc.error_feedback:
             new_err = jnp.zeros_like(new_err)
         new_pseg, new_opt = adamw.apply_bucket_updates(

@@ -53,6 +53,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comm import faults as faults_mod
 from repro.comm.config import CommConfig, reject_legacy_comm
 from repro.configs.base import ModelConfig
 from repro.core import aqsgd
@@ -202,6 +203,10 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
             glist, err_in, dpc.bits,
             jax.random.fold_in(key, 2000), stochastic=dpc.stochastic,
             backend=dpc.backend, layout=glay)
+        # payload guard: NaN-poison a corrupt decoded mean (and the EF
+        # carry, so the fault is attributable to the dp plane); clean
+        # payloads pass through bit-exactly
+        grads, new_err = faults_mod.guard_dp_pair(grads, new_err)
         if not dpc.error_feedback:
             new_err = jnp.zeros_like(new_err)
         new_state_extra = {"dp_error": new_err}
@@ -227,6 +232,7 @@ def train_step(state, batch, key, *, mcfg: ModelConfig,
             jax.random.fold_in(key, 2000), stochastic=dpc.stochastic,
             backend=dpc.backend,
             layout=grad_compress.bucket_layout(grads, dpc.group_d))
+        grads, new_err = faults_mod.guard_dp_pair(grads, new_err)
         if not dpc.error_feedback:
             new_err = jnp.zeros_like(new_err)
         new_state_extra = {"dp_error": new_err}

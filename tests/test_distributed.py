@@ -76,6 +76,16 @@ def test_launch_train_chunked_ring_identical_losses():
     assert outs["1"] == outs["2"], (outs["1"], outs["2"])
 
 
+def test_checkpoint_state_structs_roundtrip():
+    """Every struct `make_state_structs` emits — dense and ZeRO
+    segment-sharded opt moments, eval_shape-derived dp_error, raw and
+    z-bit buffer dtypes, quantized opt state — survives
+    save -> restore bit-identically on a 1-D and a 2x2 mesh, both
+    codec backends."""
+    out = run_worker("ckpt_worker.py", "run")
+    assert "OK ckpt_roundtrip" in out
+
+
 def test_quantized_psum_mean():
     """b-bit compressed allreduce: replica-consistent and unbiased."""
     out = run_worker("collectives_worker.py", "run")

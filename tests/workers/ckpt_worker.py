@@ -1,0 +1,105 @@
+"""Subprocess worker: full-state checkpoint round-trip for every
+struct `make_state_structs` emits — params, dense AND segment-sharded
+(ZeRO) optimizer moments, the eval_shape-derived ``dp_error`` EF
+stack, raw and z-bit (codes/scale) message buffers, and the quantized
+opt-state layout — on a 1-D (data=1) and a 2x2 mesh, with both codec
+backends.  Every leaf must survive save -> restore bit-identically
+(``tobytes`` equality, so bf16/uint8/int32 round through the f32
+storage rule exactly).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import tempfile
+import shutil
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.comm.config import CommConfig
+from repro.configs.base import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.training import pipeline as PL
+
+
+def _leaf_key(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def materialize(structs):
+    """Deterministic per-leaf fill (seeded by the leaf path) so a
+    mapping bug between two same-shaped leaves cannot cancel out."""
+    def fill(path, s):
+        rng = np.random.default_rng(zlib.crc32(_leaf_key(path).encode()))
+        dt = np.dtype(s.dtype)
+        if dt.kind in "iu":
+            a = rng.integers(0, 200, size=s.shape)
+        elif dt.kind == "b":
+            a = rng.integers(0, 2, size=s.shape).astype(bool)
+        else:
+            a = rng.standard_normal(s.shape)
+        return jnp.asarray(a).astype(s.dtype)
+    return jax.tree_util.tree_map_with_path(fill, structs)
+
+
+def check_roundtrip(state, comm, tag):
+    d = tempfile.mkdtemp()
+    try:
+        ckpt.save_state(d, state, step=9, comm=comm)
+        out, body = ckpt.restore_state(
+            d, jax.eval_shape(lambda: state), comm=comm)
+    finally:
+        shutil.rmtree(d)
+    assert body["step"] == 9, tag
+    want = dict(jax.tree_util.tree_flatten_with_path(state)[0])
+    got = dict(jax.tree_util.tree_flatten_with_path(out)[0])
+    assert want.keys() == got.keys(), tag
+    for p in want:
+        a, b = np.asarray(want[p]), np.asarray(got[p])
+        assert a.dtype == b.dtype, (tag, _leaf_key(p))
+        assert a.tobytes() == b.tobytes(), (tag, _leaf_key(p))
+
+
+def run_case(data, model, backend, wire, zbits, opt_bits):
+    mesh = make_debug_mesh(data, model)
+    cfg = get_config("gpt2-xl-paper", smoke=True)
+    bk = {"backend": backend}
+    comm = CommConfig.from_dict({
+        "mode": "aqsgd",
+        "fw": {"bits": 4, **bk}, "bw": {"bits": 8, **bk},
+        "zbuf": {"bits": zbits, **bk},
+        "dp": {"bits": 4, "wire": wire, **bk}, "kv": bk})
+    pcfg = PL.PipelineConfig(microbatches=2, comm=comm)
+    gb, seq = 4, 32
+    _, meta = PL.make_train_step(cfg, pcfg, mesh, AdamWConfig(),
+                                 global_batch=gb, seq_len=seq,
+                                 buffer_samples=8 // data)
+    structs, _, _ = PL.make_state_structs(
+        cfg, pcfg, meta, mesh, global_batch=gb, seq_len=seq,
+        opt_state_bits=opt_bits)
+    state = materialize(structs)
+    tag = (f"mesh=({data},{model}) backend={backend} wire={wire} "
+           f"zbits={zbits} opt_bits={opt_bits}")
+    check_roundtrip(state, comm, tag)
+    print("OK", tag)
+
+
+def main():
+    for data, model in ((1, 2), (2, 2)):
+        for backend in ("reference", "pallas"):
+            # dense opt + raw buffers; ZeRO sharded opt + z-bit
+            # buffers; dense-quantized opt state
+            run_case(data, model, backend, "ring", zbits=0, opt_bits=0)
+            run_case(data, model, backend, "ring-sharded", zbits=4,
+                     opt_bits=0)
+        run_case(data, model, "reference", "psum", zbits=0, opt_bits=8)
+    print("OK ckpt_roundtrip")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

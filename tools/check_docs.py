@@ -10,9 +10,9 @@ Checks
    followed; badge/action links like ``../../actions/...`` that point
    outside the repo are skipped).
 2. Every PUBLIC module-level function and class in ``src/repro/core``,
-   ``src/repro/kernels``, ``src/repro/comm`` and ``src/repro/serving``
-   carries a docstring, and so does every module itself.  "Public" =
-   name not starting with ``_``.
+   ``src/repro/kernels``, ``src/repro/comm``, ``src/repro/serving``
+   and ``src/repro/checkpoint`` carries a docstring, and so does every
+   module itself.  "Public" = name not starting with ``_``.
 3. Every ``REPRO_*`` knob exported by ``src/repro/env.py`` (its
    ``KNOBS`` table, extracted statically — no imports) appears in the
    README env-var reference, and no module outside ``repro/env.py``
@@ -31,7 +31,8 @@ MD_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
 PY_DIRS = [ROOT / "src" / "repro" / "core",
            ROOT / "src" / "repro" / "kernels",
            ROOT / "src" / "repro" / "comm",
-           ROOT / "src" / "repro" / "serving"]
+           ROOT / "src" / "repro" / "serving",
+           ROOT / "src" / "repro" / "checkpoint"]
 ENV_PY = ROOT / "src" / "repro" / "env.py"
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 ENV_READ_RE = re.compile(
