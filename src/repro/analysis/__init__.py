@@ -1,0 +1,28 @@
+"""`repro.analysis` — static analysis of the repo's own invariants.
+
+Two layers, one CLI (``python -m repro.analysis [--json out.json]``,
+wired into the CI lint job):
+
+* **AST lint** (`repro.analysis.lint` + `repro.analysis.rules`): the
+  semantic invariants that keep the byte-accounting trustworthy — no
+  unfused quantize outside ``core/boundary.py``, no stray ``REPRO_*``
+  env read, registry enrollment on every ``register_wire`` — as
+  pluggable visitor rules with ids, fix hints and suppression
+  comments, replacing the scattered ``inspect.getsource`` scans.
+* **HLO collective audit** (`repro.analysis.collectives`): compiles
+  every registered DP wire on the standard 4-device ring and pins its
+  full collective inventory (kind, dtype, bytes, device groups,
+  count) against the ``expected_collectives`` manifest declared next
+  to each `WireSpec` — so a GSPMD-inserted extra collective or an f32
+  all-reduce smuggled onto a compressed path fails with a diff
+  instead of shipping.
+
+Rule catalog, manifest format and how-to-add-a-rule:
+``docs/ANALYSIS.md``.  The lint layer is pure stdlib; jax loads only
+for the audit layer.
+"""
+from repro.analysis.lint import (Finding, get_rule, iter_rules,
+                                 lint_text, run_lint, run_rule)
+
+__all__ = ["Finding", "get_rule", "iter_rules", "lint_text",
+           "run_lint", "run_rule"]

@@ -1,0 +1,84 @@
+"""CLI: ``python -m repro.analysis [--json out.json]``.
+
+Runs the AST lint sweep and the HLO collective audit; exits nonzero on
+ANY finding (CI gates on this).  The audit compiles every registered
+DP wire on a 4-device host ring, so the device count is forced into
+``XLA_FLAGS`` here, before jax initializes — which is also why this
+entry point must stay the FIRST importer of anything jax-flavored.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _ensure_host_devices(n: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}").strip()
+
+
+def main(argv=None) -> int:
+    """Run both layers; return 0 only when the repo is clean."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lint rules + HLO collective audit "
+                    "(docs/ANALYSIS.md)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full machine-readable report here")
+    ap.add_argument("--rule", metavar="ID",
+                    help="run ONE lint rule instead of the full set")
+    ap.add_argument("--skip-collectives", action="store_true",
+                    help="lint layer only (no jax, no wire compiles)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.lint import get_rule, iter_rules, run_lint
+
+    rules = [get_rule(args.rule)] if args.rule else iter_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id:>28s}  [{r.severity}]  {r.summary}")
+        return 0
+
+    findings = run_lint(rules=rules)
+    for f in findings:
+        print(f"LINT {f.format()}")
+        if f.fix_hint:
+            print(f"     fix: {f.fix_hint}")
+
+    audits = []
+    if not args.skip_collectives:
+        from repro.analysis.collectives import (AUDIT_N, audit_dp_plane,
+                                                format_audits)
+        _ensure_host_devices(AUDIT_N)
+        audits = audit_dp_plane()
+        print(format_audits(audits))
+
+    report = {
+        "lint": {
+            "rules": [{"id": r.id, "severity": r.severity,
+                       "summary": r.summary, "rationale": r.rationale,
+                       "fix_hint": r.fix_hint} for r in rules],
+            "findings": [f.to_dict() for f in findings],
+        },
+        "collectives": [a.to_dict() for a in audits],
+        "ok": not findings and all(a.ok for a in audits),
+    }
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=1)
+
+    bad_audits = sum(not a.ok for a in audits)
+    print(f"repro.analysis: {len(rules)} rule(s), "
+          f"{len(findings)} lint finding(s); "
+          f"{len(audits)} wire audit(s), {bad_audits} failed")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

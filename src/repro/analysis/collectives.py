@@ -1,0 +1,328 @@
+"""HLO collective auditor: pin every wire's communication graph.
+
+The byte regression (`tests/test_hlo_cost.py`) pins each DP wire's
+TOTAL collective bytes; that total cannot see a *swap* — GSPMD
+replacing a cheap collective with a hidden expensive one plus an
+elision (the PR-4 bucket-doubling bug class), or an f32 all-reduce
+smuggled onto a compressed path.  This module pins the full
+*inventory* instead: every collective op in the optimized HLO of every
+registered DP wire — kind, operand dtype, per-op bytes, device-group
+span, count (trip-count aware) — checked against the
+``expected_collectives`` manifest each wire declares next to its
+`WireSpec` registration in `repro.comm.wires`.
+
+A manifest is a function ``(shape, bits, n) -> [(kind, dtype,
+bytes_per_op, count), ...]`` — e.g. the compressed ring at
+``(128, 256)``, b=2, n=4 declares one f32 scale all-reduce (512 B),
+three u8 code-segment permute hops (2048 B each) and three u8
+packed-sum hops (4096 B each).  The audit fails loudly, with a diff,
+on: a collective missing from / extra to the manifest, a count or
+byte-size drift, a reduction whose device group does not span the
+mesh, a manifest whose total disagrees with the wire's ``wire_bytes``
+model, or a registered collective wire with no manifest at all.  An
+unexpected f32/f64 all-reduce on a ``bits < 16`` path gets a named
+callout — that is exactly the compressed-path bug class.
+
+Compilation reuses `repro.launch.hlo_cost`'s machinery: the same
+``jit().lower().compile().as_text()`` entry `measure_collective_bytes`
+uses, the same HLO parser, and the shared `COLLECTIVE_KINDS` constant
+— one collective-kind list for the byte regression and this auditor.
+A jaxpr-level pre-pass records the collective primitives the *traced*
+program asked for, so a report shows both what was requested (jaxpr)
+and what GSPMD actually scheduled (HLO).
+
+jax and `repro.comm` are imported lazily: ``python -m repro.analysis``
+must set the host device count before JAX initializes, and the lint
+layer must stay importable without jax entirely.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_cost import (COLLECTIVE_KINDS, _BODY_RE,
+                                   _BRANCHES_RE, _CALLS_RE, _OPERAND,
+                                   _TO_RE, _TRIP_RE, _type_bytes,
+                                   parse_hlo)
+
+# the standard audit mesh: the 4-device ring every wire regression
+# compiles on, one (rows, group_d) gradient bucket, the three paper
+# widths.
+AUDIT_N = 4
+AUDIT_SHAPE = (128, 256)
+AUDIT_BITS = (2, 4, 8)
+
+_DTYPE_RE = re.compile(r"(\w+)\[")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(\{[^=]*?\})\}")
+
+#: jaxpr collective primitives counted by the pre-pass.
+JAXPR_COLLECTIVES = ("psum", "pmax", "pmin", "pmean", "ppermute",
+                     "all_gather", "psum_scatter", "all_to_all",
+                     "reduce_scatter")
+
+
+@dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction in the optimized HLO: kind, operand
+    dtype, bytes per execution, device-group span (devices per replica
+    group, or source->target pairs for a permute), and how many times
+    it runs (enclosing ``while`` trip counts multiplied through)."""
+    kind: str
+    dtype: str
+    nbytes: int
+    groups: int
+    count: int
+
+    def format(self) -> str:
+        """``kind dtype bytes x count (groups=g)`` — diff print form."""
+        return (f"{self.kind} {self.dtype} {self.nbytes} B x"
+                f"{self.count} (groups={self.groups})")
+
+    def to_dict(self) -> dict:
+        """JSON-report form."""
+        return {"kind": self.kind, "dtype": self.dtype,
+                "bytes": self.nbytes, "groups": self.groups,
+                "count": self.count}
+
+
+def _group_span(line: str, kind: str) -> int:
+    """Devices per replica group (reductions) or number of
+    source->target pairs (permutes); 0 if the attribute is absent."""
+    if kind == "collective-permute":
+        m = _PAIRS_RE.search(line)
+        return m.group(1).count("{") if m else 0
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 0
+    first = m.group(1).split("}")[0].lstrip("{")
+    return len([d for d in first.split(",") if d.strip() != ""])
+
+
+def collective_inventory(hlo_text: str) -> list:
+    """Every collective op in the ENTRY program of ``hlo_text``,
+    aggregated to :class:`CollectiveOp` rows (same-shaped ops merge
+    into one row with a summed count).  The walk recurses through
+    fusions / calls / whiles exactly like `hlo_cost` does, so scanned
+    collectives count once per trip."""
+    comps = parse_hlo(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    raw: dict[tuple, int] = {}
+
+    def walk(comp, mult):
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    trip = int(tm.group(1))
+                m = _BODY_RE.search(ins.line)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult * trip)
+                continue
+            if op == "conditional":
+                # every branch walks (an inventory has no "max branch"
+                # — a collective in ANY branch is on the wire graph)
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    for bn in _OPERAND.findall(m.group(1)):
+                        if bn in comps:
+                            walk(comps[bn], mult)
+                continue
+            if op in ("call", "async-start", "fusion"):
+                m = _TO_RE.search(ins.line) or _CALLS_RE.search(ins.line)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult)
+                continue
+            for kind in COLLECTIVE_KINDS:
+                if op == kind or op == kind + "-start":
+                    dm = _DTYPE_RE.search(ins.result_type)
+                    key = (kind, dm.group(1) if dm else "?",
+                           int(_type_bytes(ins.result_type)),
+                           _group_span(ins.line, kind))
+                    raw[key] = raw.get(key, 0) + mult
+                    break
+
+    walk(entry, 1)
+    return [CollectiveOp(kind=k, dtype=d, nbytes=b, groups=g, count=c)
+            for (k, d, b, g), c in sorted(raw.items())]
+
+
+def jaxpr_collective_counts(fn, *arg_structs) -> dict:
+    """Collective primitive counts in the *traced* program (recursing
+    into sub-jaxprs) — what the wire asked for, before GSPMD."""
+    import jax
+    counts: dict[str, int] = {}
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in JAXPR_COLLECTIVES:
+                counts[name] = counts.get(name, 0) + 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                    walk(v.jaxpr)
+                elif hasattr(v, "eqns"):         # raw Jaxpr
+                    walk(v)
+
+    walk(jax.make_jaxpr(fn)(*arg_structs).jaxpr)
+    return counts
+
+
+@dataclass
+class WireAudit:
+    """The audit verdict for one (wire, bits): measured inventory,
+    expected manifest rows, jaxpr request counts, and every problem
+    found (empty = the wire's communication graph is exactly as
+    declared)."""
+    wire: str
+    bits: int
+    n: int
+    shape: tuple
+    inventory: list = field(default_factory=list)
+    expected: list = field(default_factory=list)
+    jaxpr: dict = field(default_factory=dict)
+    problems: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        """True when the inventory matches the manifest exactly."""
+        return not self.problems
+
+    def to_dict(self) -> dict:
+        """JSON-report form."""
+        return {"wire": self.wire, "bits": self.bits, "n": self.n,
+                "shape": list(self.shape),
+                "inventory": [c.to_dict() for c in self.inventory],
+                "expected": [c.to_dict() for c in self.expected],
+                "jaxpr": self.jaxpr, "problems": self.problems,
+                "ok": self.ok}
+
+
+def _normalize_manifest(entries, n: int) -> list:
+    """Manifest tuples ``(kind, dtype, bytes, count)`` ->
+    :class:`CollectiveOp` rows; the expected group span on the 1-D
+    audit ring is always the full mesh (n devices / n permute pairs)."""
+    return [CollectiveOp(kind=k, dtype=d, nbytes=int(b), groups=n,
+                         count=int(c)) for (k, d, b, c) in entries]
+
+
+def _diff(audit: WireAudit) -> None:
+    """Compare measured inventory to the manifest and append problem
+    lines: missing / unexpected / count-drift rows, the compressed-
+    path f32-all-reduce callout, and group spans that do not cover the
+    mesh."""
+    measured = {(c.kind, c.dtype, c.nbytes, c.groups): c.count
+                for c in audit.inventory}
+    expected = {(c.kind, c.dtype, c.nbytes, c.groups): c.count
+                for c in audit.expected}
+    for key in sorted(set(measured) | set(expected)):
+        got, want = measured.get(key, 0), expected.get(key, 0)
+        if got == want:
+            continue
+        op = CollectiveOp(*key, count=abs(got - want))
+        if want == 0:
+            msg = (f"unexpected collective not in the manifest: "
+                   f"{op.format()} — GSPMD-inserted or smuggled op")
+            if op.kind == "all-reduce" and op.dtype in ("f32", "f64") \
+                    and audit.bits < 16:
+                msg += (f"; a full-precision all-reduce on a "
+                        f"{audit.bits}-bit compressed path is the "
+                        f"PR-4 bug class")
+            audit.problems.append(msg)
+        elif got == 0:
+            audit.problems.append(
+                f"missing collective declared by the manifest: "
+                f"{op.format()}")
+        else:
+            audit.problems.append(
+                f"count drift for {op.kind} {op.dtype} {op.nbytes} B "
+                f"(groups={op.groups}): measured x{got}, manifest "
+                f"x{want}")
+    for c in audit.inventory:
+        if c.groups and c.groups != audit.n:
+            audit.problems.append(
+                f"{c.format()} does not span the {audit.n}-device "
+                f"mesh — a partial-group collective on the DP ring")
+
+
+def audit_wire(spec, bits: int, *, n: int = AUDIT_N,
+               shape: tuple = AUDIT_SHAPE) -> WireAudit:
+    """Compile one registered DP wire on the n-device ring (reference
+    backend, deterministic rounding — the same lowering the byte
+    regression measures) and audit its collective inventory against
+    the wire's ``expected_collectives`` manifest and ``wire_bytes``
+    model."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh_auto, shard_map
+
+    audit = WireAudit(wire=spec.name, bits=bits, n=n, shape=shape)
+    mesh = make_mesh_auto((n,), ("d",))
+    pspec = P("d")
+
+    def wire_fn(v, err, key):
+        out, new_err = spec.collective(v[0], err[0], "d", bits, key,
+                                       stochastic=False,
+                                       backend="reference")
+        return out[None], new_err[None]
+
+    fn = shard_map(wire_fn, mesh, (pspec, pspec, P()), (pspec, pspec))
+    rows, d = shape
+    v = jax.ShapeDtypeStruct((n, rows, d), jnp.float32)
+    err = jax.ShapeDtypeStruct((n, rows, d), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    text = jax.jit(fn).lower(v, err, key).compile().as_text()
+    audit.inventory = collective_inventory(text)
+    audit.jaxpr = jaxpr_collective_counts(fn, v, err, key)
+
+    if spec.expected_collectives is None:
+        audit.problems.append(
+            f"wire {spec.name!r} has no expected_collectives manifest "
+            f"— declare one next to its register_wire call")
+        return audit
+    manifest = spec.expected_collectives(shape, bits, n)
+    audit.expected = _normalize_manifest(manifest, n)
+    _diff(audit)
+
+    model = spec.wire_bytes(shape, bits, n)
+    declared = sum(c.nbytes * c.count for c in audit.expected)
+    if declared != model:
+        audit.problems.append(
+            f"manifest total {declared} B != wire_bytes model "
+            f"{model} B — the manifest and byte model drifted apart")
+    return audit
+
+
+def audit_dp_plane(bits=AUDIT_BITS, *, n: int = AUDIT_N,
+                   shape: tuple = AUDIT_SHAPE) -> list:
+    """Audit EVERY user-selectable wire registered on the dp-grad
+    plane at every width in ``bits`` — registry-derived, so a new wire
+    enrolls automatically and cannot land unaudited."""
+    from repro.comm import wires as W
+    return [audit_wire(W.get_wire(name), b, n=n, shape=shape)
+            for name in W.wire_names("dp-grad") for b in bits]
+
+
+def format_audits(audits: list) -> str:
+    """Human-readable audit report: one line per clean (wire, bits),
+    the full diff for any failure."""
+    lines = []
+    for a in audits:
+        head = (f"{a.wire:>14s} b={a.bits}  "
+                f"{sum(c.nbytes * c.count for c in a.inventory):>8d} B "
+                f"in {sum(c.count for c in a.inventory)} collective(s)")
+        lines.append(("OK   " if a.ok else "FAIL ") + head)
+        if not a.ok:
+            for c in a.inventory:
+                lines.append(f"        measured: {c.format()}")
+            for c in a.expected:
+                lines.append(f"        manifest: {c.format()}")
+            for p in a.problems:
+                lines.append(f"     !! {p}")
+    return "\n".join(lines)

@@ -1,0 +1,327 @@
+"""AST lint engine: the repo's semantic invariants as pluggable rules.
+
+Ruff guards syntax and style; this engine guards the invariants that
+make the byte-accounting claims trustworthy — "no unfused quantize
+outside ``core/boundary.py``", "no stray ``REPRO_*`` env read", "every
+``register_wire`` call ships its byte model and simulator mirror", ...
+Each invariant used to live as a scattered ``inspect.getsource`` regex
+test or a ``check_docs.py`` scan; here it is ONE :class:`Rule` with an
+id, severity, rationale and fix hint, enforced uniformly over the whole
+tree by ``python -m repro.analysis`` (CI lint job) and invocable
+one-line from tests (`run_rule`).
+
+Rules live in `repro.analysis.rules` (one module per concern) and
+self-register through the :func:`rule` decorator::
+
+    @rule("my-rule-id",
+          summary="what it guards",
+          rationale="why it exists",
+          fix_hint="what to do instead",
+          applies=in_dirs("src/repro/"))
+    def _check(ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            ...
+            yield node.lineno, "message"
+
+Suppression
+-----------
+A finding is suppressed by a comment on the flagged line (or on a pure
+comment line directly above it)::
+
+    x = np.float64(loss)   # repro-lint: disable=no-silent-dtype-upcast
+
+and a whole file opts out of one rule with::
+
+    # repro-lint: disable-file=no-silent-dtype-upcast
+
+``disable=all`` suppresses every rule for that line.  Suppressions are
+deliberate and greppable — the lint report counts them.
+
+This module is pure stdlib (``ast`` + ``re``): the lint layer runs
+without jax so the CI lint job can gate it before any install-heavy
+step.  The sibling HLO layer lives in `repro.analysis.collectives`.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Iterable, Iterator, Optional
+
+#: directories (repo-relative) the default lint sweep walks.
+SCAN_ROOTS = ("src", "tools", "benchmarks", "examples", "tests")
+
+_DISABLE_RE = re.compile(r"#\s*repro-lint:\s*disable=([\w,\-]+)")
+_DISABLE_FILE_RE = re.compile(r"#\s*repro-lint:\s*disable-file=([\w,\-]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation: rule id, location, message, and the rule's
+    fix hint (carried so ``--json`` reports are self-describing)."""
+    rule: str
+    severity: str
+    path: str                 # repo-relative posix path
+    line: int
+    message: str
+    fix_hint: str = ""
+
+    def format(self) -> str:
+        """``path:line: [rule] message`` — the CLI print form."""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        """JSON-report form."""
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line,
+                "message": self.message, "fix_hint": self.fix_hint}
+
+
+@dataclass
+class FileContext:
+    """One parsed file as the rules see it: repo-relative posix path,
+    raw text, parsed ``ast`` tree, and the physical lines (for
+    suppression comments)."""
+    relpath: str
+    text: str
+    tree: ast.Module
+    lines: list = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, text: str, relpath: str) -> "FileContext":
+        """Parse ``text`` as the file at ``relpath`` (virtual paths are
+        fine — the fixture tests lint in-memory snippets)."""
+        return cls(relpath=relpath, text=text,
+                   tree=ast.parse(text), lines=text.splitlines())
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One registered lint rule: identity, docs, scope and checker.
+
+    ``check(ctx)`` yields ``(lineno, message)`` pairs; the engine turns
+    them into :class:`Finding`\\ s and applies suppression comments."""
+    id: str
+    severity: str
+    summary: str              # what it guards
+    rationale: str            # why it exists
+    fix_hint: str             # what to write instead
+    check: Callable[[FileContext], Iterable]
+    applies: Callable[[str], bool]
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def rule(rule_id: str, *, summary: str, rationale: str, fix_hint: str,
+         severity: str = "error",
+         applies: Optional[Callable[[str], bool]] = None):
+    """Decorator registering a checker function as a :class:`Rule`.
+
+    ``applies`` filters repo-relative posix paths (default: every
+    scanned file).  Rule ids are unique — re-registration raises."""
+    def deco(fn):
+        if rule_id in _RULES:
+            raise ValueError(f"lint rule {rule_id!r} already registered")
+        _RULES[rule_id] = Rule(
+            id=rule_id, severity=severity, summary=summary,
+            rationale=rationale, fix_hint=fix_hint, check=fn,
+            applies=applies or (lambda relpath: True))
+        return fn
+    return deco
+
+
+def iter_rules() -> list[Rule]:
+    """All registered rules, registration order (imports
+    `repro.analysis.rules` so the built-ins are present)."""
+    from repro.analysis import rules as _  # noqa: F401  (self-register)
+    return list(_RULES.values())
+
+
+def get_rule(rule_id: str) -> Rule:
+    """Look one rule up by id; unknown ids raise with the known list."""
+    rules = {r.id: r for r in iter_rules()}
+    if rule_id not in rules:
+        raise ValueError(f"unknown lint rule {rule_id!r}; registered: "
+                         f"{', '.join(sorted(rules))}")
+    return rules[rule_id]
+
+
+def in_dirs(*prefixes: str, exclude: tuple = ()):
+    """Scope helper: path starts with any prefix and is not excluded
+    (both repo-relative posix)."""
+    def applies(relpath: str) -> bool:
+        return (relpath.startswith(prefixes)
+                and relpath not in exclude)
+    return applies
+
+
+def not_in(*excluded: str):
+    """Scope helper: every path except the named ones."""
+    def applies(relpath: str) -> bool:
+        return relpath not in excluded
+    return applies
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers (import-alias tracking) — rules compose these so
+# aliased imports (`from os import environ as e`) cannot dodge a rule
+# ---------------------------------------------------------------------------
+
+def module_aliases(tree: ast.Module, module: str) -> set:
+    """Every name the file binds to ``module``: ``import m``,
+    ``import m as x``, and ``from pkg import mod as x`` for
+    ``pkg.mod == module``.  The full dotted name itself is always
+    included (``import repro.core.quantization`` is used as the full
+    attribute chain)."""
+    names = {module}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == module:
+                    names.add(a.asname or a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                if f"{node.module}.{a.name}" == module:
+                    names.add(a.asname or a.name)
+    return names
+
+
+def imported_names(tree: ast.Module, module: str) -> dict:
+    """``from module import name [as alias]`` bindings:
+    ``{local_alias: original_name}``."""
+    out = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == module:
+            for a in node.names:
+                out[a.asname or a.name] = a.name
+    return out
+
+
+def dotted(node) -> Optional[str]:
+    """A ``Name``/``Attribute`` chain as a dotted string
+    (``jax.lax.psum``), or None for anything dynamic."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def const_str(node) -> Optional[str]:
+    """The value of a string constant (or the literal head of an
+    f-string), else None — enough to catch ``\"REPRO_\" + name``-style
+    literal prefixes without executing anything."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr) and node.values:
+        head = node.values[0]
+        if isinstance(head, ast.Constant) and isinstance(head.value, str):
+            return head.value
+    return None
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _file_disabled(ctx: FileContext) -> set:
+    out = set()
+    for m in _DISABLE_FILE_RE.finditer(ctx.text):
+        out.update(m.group(1).split(","))
+    return out
+
+
+def _line_disabled(ctx: FileContext, lineno: int) -> set:
+    """Suppression ids active for ``lineno``: trailing comment on the
+    line itself, or a pure-comment line directly above."""
+    out = set()
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(ctx.lines):
+            text = ctx.lines[ln - 1]
+            if ln != lineno and not text.lstrip().startswith("#"):
+                continue
+            m = _DISABLE_RE.search(text)
+            if m:
+                out.update(m.group(1).split(","))
+    return out
+
+
+def check_file(ctx: FileContext, rules: Optional[list] = None) -> list:
+    """Run ``rules`` (default: all registered) over one parsed file,
+    applying suppression comments.  Returns :class:`Finding`\\ s."""
+    findings = []
+    file_off = _file_disabled(ctx)
+    for r in (rules if rules is not None else iter_rules()):
+        if not r.applies(ctx.relpath):
+            continue
+        if r.id in file_off or "all" in file_off:
+            continue
+        for lineno, message in r.check(ctx):
+            off = _line_disabled(ctx, lineno)
+            if r.id in off or "all" in off:
+                continue
+            findings.append(Finding(
+                rule=r.id, severity=r.severity, path=ctx.relpath,
+                line=lineno, message=message, fix_hint=r.fix_hint))
+    return findings
+
+
+def lint_text(text: str, relpath: str,
+              rules: Optional[list] = None) -> list:
+    """Lint an in-memory snippet as if it lived at ``relpath`` — the
+    seeded-violation fixture entry point."""
+    return check_file(FileContext.parse(text, relpath), rules)
+
+
+def repo_root() -> Path:
+    """The repository root, resolved from this file's location
+    (``src/repro/analysis/lint.py`` -> three parents up)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def iter_python_files(root: Optional[Path] = None) -> Iterator[Path]:
+    """Every ``*.py`` under the scan roots, sorted, caches skipped."""
+    root = root or repo_root()
+    for top in SCAN_ROOTS:
+        d = root / top
+        if not d.is_dir():
+            continue
+        for py in sorted(d.rglob("*.py")):
+            if "__pycache__" in py.parts:
+                continue
+            yield py
+
+
+def run_lint(root: Optional[Path] = None,
+             rules: Optional[list] = None) -> list:
+    """Lint the whole repo (or one rooted at ``root``).  Unparseable
+    files surface as ``parse-error`` findings instead of crashing the
+    sweep."""
+    root = root or repo_root()
+    rules = rules if rules is not None else iter_rules()
+    findings = []
+    for py in iter_python_files(root):
+        rel = py.relative_to(root).as_posix()
+        try:
+            ctx = FileContext.parse(py.read_text(), rel)
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="parse-error", severity="error", path=rel,
+                line=e.lineno or 0, message=f"file does not parse: {e.msg}"))
+            continue
+        findings.extend(check_file(ctx, rules))
+    return findings
+
+
+def run_rule(rule_id: str, root: Optional[Path] = None) -> list:
+    """Run ONE rule over its scope — the one-line test entry point that
+    replaced the scattered ``inspect.getsource`` scans::
+
+        assert run_rule("no-unfused-quantize") == []
+    """
+    return run_lint(root, rules=[get_rule(rule_id)])

@@ -1,0 +1,17 @@
+"""Built-in lint rules, one module per concern.
+
+Importing this package registers every rule with the engine
+(`repro.analysis.lint`); adding a rule = adding/extending one module
+here and importing it below (docs/ANALYSIS.md walks through it).  The
+rule catalog — what each id guards and why — is generated into the
+``--json`` report from the rule metadata, so it cannot drift from the
+code."""
+from repro.analysis.rules import (  # noqa: F401  (self-registering)
+    boundary,
+    comm,
+    dtypes,
+    envreads,
+    imports,
+    jit,
+    sourcescan,
+)

@@ -1,0 +1,61 @@
+"""Rule ``no-unfused-quantize``: the fused-boundary invariant.
+
+Every quantize / pack / unpack / dequantize on a wire path must route
+through `repro.core.boundary`'s backend-selectable fused ops — never
+the raw `repro.core.quantization` building blocks, whose unfused
+quantize->pack chain costs ~6 HBM round trips per crossing.  This is
+the rule form of the `inspect.getsource` scans PR 1/PR 2 kept in
+``tests/test_boundary_parity.py`` and ``tests/test_grad_compress.py``
+— consolidated here, alias-proof (``from repro.core import
+quantization as QQ`` is caught), and enforced over every wire-path
+module at once instead of a hand-kept module list."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import dotted, imported_names, in_dirs, \
+    module_aliases, rule
+
+QUANT_MODULE = "repro.core.quantization"
+BANNED = ("quantize", "pack_codes", "unpack_codes", "dequantize", "qdq")
+
+# the wire-path modules: trainers, collectives, comm subsystem, serving.
+# core/boundary.py IS the fused implementation and core/quantization.py
+# the building blocks themselves; kernels/ and optim/ (HBM-local 8-bit
+# optimizer state) are off the wire path.
+_SCOPE = in_dirs(
+    "src/repro/training/", "src/repro/comm/", "src/repro/serving/",
+    "src/repro/core/",
+    exclude=("src/repro/core/boundary.py",
+             "src/repro/core/quantization.py"))
+
+
+@rule("no-unfused-quantize",
+      summary="wire-path modules must use core.boundary fused ops, "
+              "never raw core.quantization calls",
+      rationale="the unfused quantize->pack chain costs ~6 HBM round "
+                "trips per boundary crossing and dodges the "
+                "ref|pallas parity gates on core.boundary",
+      fix_hint="route the crossing through the matching "
+               "repro.core.boundary op (encode_delta, "
+               "encode_codes_with_scale, decode_sum_mean, ...)",
+      applies=_SCOPE)
+def check(ctx):
+    """Flag calls to banned `quantization` functions via any module
+    alias or direct from-import."""
+    aliases = module_aliases(ctx.tree, QUANT_MODULE)
+    direct = {local for local, orig
+              in imported_names(ctx.tree, QUANT_MODULE).items()
+              if orig in BANNED}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in BANNED \
+                and dotted(f.value) in aliases:
+            yield node.lineno, (
+                f"unfused `{dotted(f)}(...)` on a wire path")
+        elif isinstance(f, ast.Name) and f.id in direct:
+            yield node.lineno, (
+                f"unfused `{f.id}(...)` (imported from "
+                f"{QUANT_MODULE}) on a wire path")

@@ -1,0 +1,147 @@
+"""Comm-subsystem rules: the registry is the only door to the wire.
+
+Three rules guard `repro.comm`'s ownership of every inter-machine
+byte:
+
+* ``no-legacy-comm-kwargs`` — the pre-registry scattered kwargs on
+  ``PipelineConfig`` / ``SimTrainConfig`` raise at runtime since PR 6;
+  any call site still passing one is dead code that only detonates
+  when executed.
+* ``registry-completeness`` — a ``register_wire`` call must carry its
+  ``wire_bytes`` byte model, and a real collective wire must carry its
+  simulator mirror AND its expected-collective manifest (the HLO
+  auditor's per-wire contract); harness-internal wrappers
+  (``internal=True``) are exempt from the manifest.
+* ``no-direct-collective`` — ``jax.lax`` collectives live only in the
+  comm-owned modules; anywhere else they are bytes the registry cannot
+  account for.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import dotted, imported_names, in_dirs, \
+    module_aliases, rule
+
+LEGACY_KWARGS = ("compression", "buffer_bits", "dp_grad_bits",
+                 "dp_grad_group", "dp_wire", "dp_sharded")
+_CONFIG_CLASSES = ("PipelineConfig", "SimTrainConfig")
+
+
+@rule("no-legacy-comm-kwargs",
+      summary="no call site passes the removed pre-registry comm "
+              "kwargs to PipelineConfig / SimTrainConfig",
+      rationale="those kwargs raise a migration TypeError at runtime "
+                "(PR 6); a surviving call site is a landmine that "
+                "only detonates when executed",
+      fix_hint="pass comm=CommConfig(...) — CommConfig.from_legacy "
+               "converts the old knob set verbatim")
+def check_legacy(ctx):
+    """Flag PipelineConfig(...)/SimTrainConfig(...) calls carrying any
+    removed comm kwarg (CommConfig.from_legacy is NOT flagged — it is
+    the supported converter)."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None or name.split(".")[-1] not in _CONFIG_CLASSES:
+            continue
+        bad = [kw.arg for kw in node.keywords if kw.arg in LEGACY_KWARGS]
+        if bad:
+            yield node.lineno, (
+                f"removed comm kwarg(s) {', '.join(bad)} passed to "
+                f"{name.split('.')[-1]} — this raises at runtime")
+
+
+@rule("registry-completeness",
+      summary="every register_wire call provides wire_bytes, and a "
+              "collective wire its sim_allreduce + "
+              "expected_collectives manifest",
+      rationale="a wire without a byte model dodges the HLO byte "
+                "regression; one without a manifest dodges the "
+                "collective auditor — the gates that make every perf "
+                "claim checkable",
+      fix_hint="pass wire_bytes=..., and for collective wires "
+               "sim_allreduce=... plus expected_collectives=... "
+               "(internal=True harness wrappers skip the manifest)",
+      applies=in_dirs("src/"))
+def check_registry(ctx):
+    """Statically require the registry-enrollment kwargs on every
+    ``register_wire`` call site (splatted ``**kwargs`` calls cannot be
+    checked and are flagged as unverifiable)."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None or name.split(".")[-1] != "register_wire":
+            continue
+        kwargs = {kw.arg for kw in node.keywords}
+        if None in kwargs:
+            yield node.lineno, ("register_wire call splats **kwargs — "
+                                "enrollment cannot be verified "
+                                "statically")
+            continue
+        if "wire_bytes" not in kwargs:
+            yield node.lineno, ("register_wire without a wire_bytes= "
+                                "byte model")
+        if "collective" in kwargs:
+            if "sim_allreduce" not in kwargs:
+                yield node.lineno, ("collective wire registered "
+                                    "without its sim_allreduce= "
+                                    "simulator mirror")
+            internal = any(
+                kw.arg == "internal"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True for kw in node.keywords)
+            if not internal and "expected_collectives" not in kwargs:
+                yield node.lineno, ("collective wire registered "
+                                    "without an expected_collectives= "
+                                    "manifest for the HLO auditor")
+
+
+COLLECTIVE_FNS = ("psum", "pmean", "pmax", "pmin", "ppermute",
+                  "all_gather", "psum_scatter", "all_to_all",
+                  "pbroadcast")
+
+# the comm-owned modules: the collectives library, the registry + fault
+# wrappers, the pipeline trainer (activation ppermute), the mesh shim,
+# and expert-parallel MoE dispatch.
+_COLL_SCOPE = in_dirs(
+    "src/",
+    exclude=("src/repro/core/collectives.py", "src/repro/comm/wires.py",
+             "src/repro/comm/faults.py",
+             "src/repro/training/pipeline.py",
+             "src/repro/launch/mesh.py", "src/repro/models/moe.py"))
+
+
+@rule("no-direct-collective",
+      summary="jax.lax collectives appear only in comm-owned modules",
+      rationale="a collective outside core/collectives, comm/, the "
+                "pipeline trainer or moe dispatch ships bytes the "
+                "wire registry cannot account for (the PR-4 hidden-"
+                "collective bug class, hand-written)",
+      fix_hint="move the collective into core/collectives.py or "
+               "register it as a wire; consumers go through the "
+               "registry",
+      applies=_COLL_SCOPE)
+def check_collectives(ctx):
+    """Flag ``jax.lax.<collective>`` calls under any alias of ``jax``
+    / ``jax.lax``, and direct ``from jax.lax import psum`` uses."""
+    jax_names = module_aliases(ctx.tree, "jax")
+    lax_names = module_aliases(ctx.tree, "jax.lax") \
+        | {f"{j}.lax" for j in jax_names}
+    direct = {local for local, orig
+              in imported_names(ctx.tree, "jax.lax").items()
+              if orig in COLLECTIVE_FNS}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None:
+            continue
+        head, _, fn = name.rpartition(".")
+        if (head in lax_names and fn in COLLECTIVE_FNS) \
+                or (not head and fn in direct):
+            yield node.lineno, (
+                f"direct collective `{name}(...)` outside the "
+                f"comm-owned modules")

@@ -1,0 +1,40 @@
+"""Rule ``no-silent-dtype-upcast``: no f64 literals on wire paths.
+
+Every byte claim in this repo is pinned to a model; a ``float64``
+literal on a wire-path module doubles a payload (or an accumulator
+feeding one) without any model noticing — jax silently downcasts
+under default x64-off, so the bug additionally hides until someone
+enables x64.  Host-side diagnostics that genuinely want f64 carry a
+suppression comment (see `comm/faults.py`)."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import dotted, in_dirs, module_aliases, rule
+
+_SCOPE = in_dirs("src/repro/core/", "src/repro/comm/",
+                 "src/repro/serving/", "src/repro/training/")
+
+
+@rule("no-silent-dtype-upcast",
+      summary="no float64 dtype literals in wire-path modules",
+      rationale="an f64 literal doubles a payload the byte models "
+                "never account for, and x64-off jax masks it until "
+                "deployment",
+      fix_hint="stay in float32 (the wire precision), or add a "
+               "`# repro-lint: disable=no-silent-dtype-upcast` for a "
+               "host-side diagnostic",
+      applies=_SCOPE)
+def check(ctx):
+    """Flag ``np.float64`` / ``jnp.float64`` attribute uses and bare
+    ``\"float64\"`` string literals (astype/dtype= forms)."""
+    num_names = module_aliases(ctx.tree, "numpy") \
+        | module_aliases(ctx.tree, "jax.numpy")
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64" \
+                and dotted(node.value) in num_names:
+            yield node.lineno, (f"f64 literal `{dotted(node)}` on a "
+                                f"wire-path module")
+        elif isinstance(node, ast.Constant) and node.value == "float64":
+            yield node.lineno, ('f64 dtype string "float64" on a '
+                                'wire-path module')

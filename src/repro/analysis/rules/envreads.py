@@ -1,0 +1,65 @@
+"""Rule ``no-stray-env-read``: every ``REPRO_*`` knob goes through
+`repro.env`.
+
+`repro.env.KNOBS` is the single documented switchboard (check_docs
+cross-checks it against the README reference); a stray
+``os.environ.get("REPRO_X")`` elsewhere is an undocumented knob.  This
+is the AST form of the regex scan ``tools/check_docs.py`` used to run
+— with the regex's blind spot fixed: aliased imports (``from os import
+environ as e``, ``from os import getenv as g``, ``import os as o``)
+are resolved instead of missed."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import const_str, dotted, in_dirs, \
+    module_aliases, rule
+
+# src + tools + benchmarks + examples; tests may probe knobs freely,
+# and src/repro/env.py IS the accessor module.
+_SCOPE = in_dirs("src/", "tools/", "benchmarks/", "examples/",
+                 exclude=("src/repro/env.py",))
+
+
+def _is_repro(node) -> bool:
+    s = const_str(node)
+    return s is not None and s.startswith("REPRO_")
+
+
+@rule("no-stray-env-read",
+      summary="REPRO_* environment knobs are read only by "
+              "src/repro/env.py",
+      rationale="repro.env.KNOBS is the documented knob table the "
+                "README reference is gated against; a stray read is "
+                "an undocumented switch",
+      fix_hint="add an accessor to repro/env.py (and its KNOBS row) "
+               "and call that",
+      applies=_SCOPE)
+def check(ctx):
+    """Flag REPRO_* reads through ``os.environ`` / ``os.getenv`` under
+    any import alias: subscripts, ``.get``/``.setdefault`` calls, and
+    bare ``getenv`` from-imports."""
+    os_names = module_aliases(ctx.tree, "os")
+    environ_names = module_aliases(ctx.tree, "os.environ") \
+        | {f"{o}.environ" for o in os_names}
+    getenv_names = module_aliases(ctx.tree, "os.getenv") \
+        | {f"{o}.getenv" for o in os_names}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.ctx, ast.Load) \
+                and dotted(node.value) in environ_names \
+                and _is_repro(node.slice):
+            yield node.lineno, ("REPRO_* read via os.environ[...] "
+                                "outside repro/env.py")
+        elif isinstance(node, ast.Call) and node.args:
+            name = dotted(node.func)
+            if name is None:
+                continue
+            if name in getenv_names and _is_repro(node.args[0]):
+                yield node.lineno, ("REPRO_* read via os.getenv "
+                                    "outside repro/env.py")
+            elif name.endswith((".get", ".setdefault")) \
+                    and name.rsplit(".", 1)[0] in environ_names \
+                    and _is_repro(node.args[0]):
+                yield node.lineno, ("REPRO_* read via os.environ.get "
+                                    "outside repro/env.py")

@@ -1,0 +1,48 @@
+"""Rule ``no-raw-shard-map-import``: the mesh shim is the one door.
+
+`repro.launch.mesh` wraps ``shard_map`` (and mesh construction) behind
+the jax-0.4.x compatibility shims — AxisType, ``check_vma`` vs
+``check_rep`` kwarg drift, tuple axis handling.  A direct
+``jax.experimental.shard_map`` import bypasses the shim and breaks on
+exactly one side of the jax version fence."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import dotted, not_in, rule
+
+_MESH = "src/repro/launch/mesh.py"
+
+
+@rule("no-raw-shard-map-import",
+      summary="shard_map is imported only via repro.launch.mesh",
+      rationale="launch/mesh.py carries the jax-0.4.x compat shims "
+                "(check_vma/check_rep kwarg drift, AxisType); a raw "
+                "import breaks on one side of the version fence",
+      fix_hint="from repro.launch.mesh import shard_map",
+      applies=not_in(_MESH))
+def check(ctx):
+    """Flag imports of (or attribute chains into)
+    ``jax.experimental.shard_map`` anywhere but the shim module."""
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == "jax.experimental.shard_map":
+                yield node.lineno, ("raw jax.experimental.shard_map "
+                                    "import bypasses the launch/mesh "
+                                    "compat shim")
+            elif node.module == "jax.experimental" and any(
+                    a.name == "shard_map" for a in node.names):
+                yield node.lineno, ("raw jax.experimental shard_map "
+                                    "import bypasses the launch/mesh "
+                                    "compat shim")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.experimental.shard_map":
+                    yield node.lineno, ("raw jax.experimental."
+                                        "shard_map import bypasses "
+                                        "the launch/mesh compat shim")
+        elif isinstance(node, ast.Attribute):
+            if dotted(node) == "jax.experimental.shard_map.shard_map":
+                yield node.lineno, ("raw jax.experimental.shard_map "
+                                    "use bypasses the launch/mesh "
+                                    "compat shim")

@@ -1,0 +1,73 @@
+"""Rule ``no-host-callables-in-jit``: traced functions stay pure.
+
+``time.time()`` or ``np.random.*`` inside a jitted function runs ONCE
+at trace time and bakes its value into the executable — timings that
+measure compilation, "random" draws identical every step.  jax PRNG
+keys and host-side timing around the jit boundary are the supported
+forms."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import dotted, in_dirs, module_aliases, rule
+
+_TIME_FNS = ("time", "perf_counter", "perf_counter_ns", "monotonic",
+             "time_ns", "sleep")
+_JIT_NAMES = ("jax.jit", "jit", "jax.pmap", "pmap")
+
+
+def _is_jit_decorator(dec) -> bool:
+    name = dotted(dec)
+    if name in _JIT_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        fname = dotted(dec.func)
+        if fname in _JIT_NAMES:
+            return True
+        # functools.partial(jax.jit, static_argnames=...)
+        if fname in ("functools.partial", "partial") and dec.args \
+                and dotted(dec.args[0]) in _JIT_NAMES:
+            return True
+    return False
+
+
+@rule("no-host-callables-in-jit",
+      summary="no time.* / np.random / random calls inside jitted "
+              "functions",
+      rationale="host callables run once at trace time: the 'timing' "
+                "measures compilation and the 'randomness' is a "
+                "constant replayed every step",
+      fix_hint="thread a jax PRNG key for randomness; time around the "
+               "jit boundary (after block_until_ready) for timing",
+      applies=in_dirs("src/"))
+def check(ctx):
+    """Walk functions decorated with jax.jit/pmap (directly, called,
+    or via functools.partial) and flag host-library calls inside."""
+    time_names = module_aliases(ctx.tree, "time")
+    np_names = module_aliases(ctx.tree, "numpy") \
+        | module_aliases(ctx.tree, "numpy.random")
+    random_names = module_aliases(ctx.tree, "random")
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not any(_is_jit_decorator(d) for d in node.decorator_list):
+            continue
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            name = dotted(call.func)
+            if name is None or "." not in name:
+                continue
+            head, _, fn = name.rpartition(".")
+            if head in time_names and fn in _TIME_FNS:
+                yield call.lineno, (
+                    f"host call `{name}()` inside jitted "
+                    f"`{node.name}` — runs once at trace time")
+            elif (head in np_names and fn.startswith("random")) \
+                    or any(head == f"{n}.random" or head.startswith(
+                        f"{n}.random.") for n in np_names) \
+                    or head in random_names:
+                yield call.lineno, (
+                    f"host RNG `{name}(...)` inside jitted "
+                    f"`{node.name}` — the draw is a trace-time "
+                    f"constant")

@@ -1,0 +1,41 @@
+"""Rule ``no-getsource-scan``: invariants are lint rules, not regexes.
+
+The PR-1..4 era enforced source invariants with per-test
+``inspect.getsource`` substring scans — each one a hand-kept module
+list that silently went stale when code moved (the PR-4 bucket-
+doubling bug lived exactly in such a blind spot).  Those scans are now
+`repro.analysis` rules; this meta-rule keeps new ones from sneaking
+back in."""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import dotted, imported_names, in_dirs, \
+    module_aliases, rule
+
+
+@rule("no-getsource-scan",
+      summary="no inspect.getsource source-scanning in tests or src",
+      rationale="getsource substring scans carry hand-kept module "
+                "lists that go stale silently; the lint engine scopes "
+                "rules by path and survives refactors",
+      fix_hint="write a repro.analysis.rules rule and assert "
+               "run_rule(<id>) == [] (see docs/ANALYSIS.md)",
+      applies=in_dirs("src/", "tests/"))
+def check(ctx):
+    """Flag ``inspect.getsource(...)`` calls under any alias."""
+    inspect_names = module_aliases(ctx.tree, "inspect")
+    direct = {local for local, orig
+              in imported_names(ctx.tree, "inspect").items()
+              if orig == "getsource"}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None:
+            continue
+        head, _, fn = name.rpartition(".")
+        if (head in inspect_names and fn == "getsource") \
+                or (not head and fn in direct):
+            yield node.lineno, ("inspect.getsource source scan — "
+                                "write a lint rule instead")

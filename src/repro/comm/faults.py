@@ -425,6 +425,8 @@ def check_train_state(state: dict, *, comm, step: int,
                     plane=blame, wire=getattr(comm, blame).wire,
                     step=step, detail=f"{name} {d}")
     if loss is not None:
+        # host-side diagnostic print, never on the wire
+        # repro-lint: disable=no-silent-dtype-upcast
         d = _arr_detail(np.asarray(loss, dtype=np.float64))
         if d:
             raise WireFaultError(plane=blame,

@@ -18,7 +18,15 @@ later PR registers.  Each entry is a :class:`WireSpec` carrying
   a wire cannot land without a pinned byte model);
 * for DP wires, the shard_map ``collective`` and its bit-faithful
   simulator ``sim_allreduce`` (``sharded=True`` marks the ZeRO wire
-  whose result is one owned segment per rank).
+  whose result is one owned segment per rank);
+* for DP wires, ``expected_collectives(shape, bits, n)`` — the wire's
+  *communication-graph manifest*: every collective its compiled HLO is
+  allowed to contain, as ``(kind, dtype, bytes_per_op, count)`` rows.
+  `repro.analysis.collectives` compiles each wire on the standard
+  4-device ring and diffs the measured inventory against this
+  manifest, so a GSPMD-inserted extra collective (the PR-4 bug class)
+  or an f32 all-reduce smuggled onto a compressed path fails loudly
+  (``python -m repro.analysis``, gated in CI).
 
 `register_wire` is how new wires land: the ROADMAP's autodiff-hoist
 wire, topk, or further passthroughs become registry entries instead of
@@ -59,6 +67,11 @@ class WireSpec:
     wire_bytes: Callable[[tuple, int, int], int]
     collective: Optional[Callable] = None     # shard_map body (dp-grad)
     sim_allreduce: Optional[Callable] = None  # bit-/math-faithful sim
+    expected_collectives: Optional[Callable] = None
+                                              # (shape, bits, n) ->
+                                              # [(kind, dtype, bytes,
+                                              #   count)] manifest the
+                                              # HLO auditor pins
     sharded: bool = False                     # ZeRO: one segment/rank
     network: bool = True                      # False: HBM plane
     chunkable: bool = False                   # accepts a chunks= kwarg:
@@ -85,7 +98,8 @@ _REGISTRY: dict[tuple[str, str], WireSpec] = {}
 
 def register_wire(name: str, *, summary: str, wire_bytes,
                   plane: str = "dp-grad", collective=None,
-                  sim_allreduce=None, sharded: bool = False,
+                  sim_allreduce=None, expected_collectives=None,
+                  sharded: bool = False,
                   network: bool = True, chunkable: bool = False,
                   psum_lowered: bool = False,
                   internal: bool = False) -> WireSpec:
@@ -97,7 +111,12 @@ def register_wire(name: str, *, summary: str, wire_bytes,
     registers a harness-owned wrapper (e.g. `repro.comm.faults` fault
     wires): resolvable by `get_wire` but hidden from `wire_names` /
     `list_wires`, so CLI help, ``--list-wires``, and the registry-
-    completeness byte-model gates never see it."""
+    completeness byte-model gates never see it.
+
+    ``expected_collectives`` is the wire's communication-graph
+    manifest for the `repro.analysis.collectives` auditor (see the
+    module docstring); the ``registry-completeness`` lint rule
+    requires it on every non-internal collective wire."""
     assert plane in PLANES, plane
     key = (plane, name)
     if key in _REGISTRY:
@@ -105,7 +124,9 @@ def register_wire(name: str, *, summary: str, wire_bytes,
                          f"{plane!r}")
     spec = WireSpec(name=name, plane=plane, summary=summary,
                     wire_bytes=wire_bytes, collective=collective,
-                    sim_allreduce=sim_allreduce, sharded=sharded,
+                    sim_allreduce=sim_allreduce,
+                    expected_collectives=expected_collectives,
+                    sharded=sharded,
                     network=network, chunkable=chunkable,
                     psum_lowered=psum_lowered, internal=internal)
     _REGISTRY[key] = spec
@@ -204,6 +225,65 @@ def _kv_bytes(shape, bits: int, n: int = 1) -> int:
 
 
 # ---------------------------------------------------------------------------
+# expected-collective manifests (shape, bits, n) -> [(kind, dtype,
+# bytes_per_op, count)].  The communication graph each DP wire is
+# ALLOWED to compile to — `repro.analysis.collectives` diffs the
+# measured HLO inventory against these rows, and checks each
+# manifest's total against the wire_bytes model above, so neither can
+# drift.  Counts are per device per step on an n-rank ring.
+# ---------------------------------------------------------------------------
+
+def _scale_pmax(shape) -> tuple:
+    """The one collective every codec wire shares: the f32 per-row
+    scale ``pmax`` (rows * 4 B in a single all-reduce)."""
+    rows, _ = shape
+    return ("all-reduce", "f32", rows * 4, 1)
+
+
+def _ring_manifest(shape, bits: int, n: int):
+    """Full compressed ring: n-1 packed b-bit code-segment hops
+    (reduce-scatter half) + n-1 packed code-SUM segment hops at
+    b + ceil(log2 n) bits (all-gather half) + the scale pmax."""
+    rows, d = shape
+    seg = C.ring_segment_rows(rows, n)
+    return [
+        _scale_pmax(shape),
+        ("collective-permute", "u8", seg * Q.packed_width(d, bits),
+         n - 1),
+        ("collective-permute", "u8",
+         seg * Q.sum_packed_width(d, bits, n), n - 1),
+    ]
+
+
+def _ring_sharded_manifest(shape, bits: int, n: int):
+    """ZeRO wire: the ring stopped at its reduce-scatter midpoint —
+    only the n-1 packed code hops and the scale pmax; any other
+    collective here is the GSPMD-inserted bug class."""
+    rows, d = shape
+    seg = C.ring_segment_rows(rows, n)
+    return [
+        _scale_pmax(shape),
+        ("collective-permute", "u8", seg * Q.packed_width(d, bits),
+         n - 1),
+    ]
+
+
+def _psum_manifest(shape, bits: int, n: int):
+    """i32-lane baseline: one s32 code all-reduce + the scale pmax."""
+    del bits, n
+    rows, d = shape
+    return [_scale_pmax(shape), ("all-reduce", "s32", rows * d * 4, 1)]
+
+
+def _fp16_manifest(shape, bits: int, n: int):
+    """Passthrough: exactly one f16 all-reduce — no codes, no scales;
+    an f32 all-reduce appearing here would mean the cast was elided."""
+    del bits, n
+    rows, d = shape
+    return [("all-reduce", "f16", rows * d * 2, 1)]
+
+
+# ---------------------------------------------------------------------------
 # the fp16 passthrough DP wire — the registry-only wire: nothing in
 # core/collectives.py special-cases it, yet it trains end-to-end
 # ---------------------------------------------------------------------------
@@ -285,21 +365,24 @@ register_wire(
             "psum)",
     wire_bytes=_ring_bytes,
     collective=C.ring_ef_reduce_mean_bucket,
-    sim_allreduce=GC.compress_allreduce)
+    sim_allreduce=GC.compress_allreduce,
+    expected_collectives=_ring_manifest)
 register_wire(
     "psum", psum_lowered=True,
     summary="int32 code lanes in one psum (conservative baseline; "
             "bit-identical to ring)",
     wire_bytes=_psum_bytes,
     collective=C.ef_psum_mean_bucket,
-    sim_allreduce=GC.compress_allreduce)
+    sim_allreduce=GC.compress_allreduce,
+    expected_collectives=_psum_manifest)
 register_wire(
     "ring-sharded", sharded=True, chunkable=True,
     summary="ZeRO wire: the ring's reduce-scatter half only, "
             "segment-owner optimizer, f32 updated-parameter all-gather",
     wire_bytes=_ring_sharded_bytes,
     collective=C.ring_ef_reduce_scatter_bucket,
-    sim_allreduce=GC.compress_reduce_scatter)
+    sim_allreduce=GC.compress_reduce_scatter,
+    expected_collectives=_ring_sharded_manifest)
 register_wire(
     "fp16", psum_lowered=True,
     summary="raw float16 gradient lanes in one psum (passthrough "
@@ -307,4 +390,5 @@ register_wire(
             "guarantees; bits knob ignored)",
     wire_bytes=_fp16_bytes,
     collective=fp16_mean_bucket,
-    sim_allreduce=fp16_sim_allreduce)
+    sim_allreduce=fp16_sim_allreduce,
+    expected_collectives=_fp16_manifest)

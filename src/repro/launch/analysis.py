@@ -19,6 +19,8 @@ import re
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.launch.hlo_cost import COLLECTIVE_KINDS
+
 # -- TPU v5e hardware constants (per chip) ----------------------------------
 PEAK_FLOPS = 197e12            # bf16
 HBM_BW = 819e9                 # bytes/s
@@ -31,8 +33,9 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
-                     "all-to-all", "collective-permute")
+# one shared kind list (launch/hlo_cost.py) — the roofline breakdown,
+# the byte regression and the repro.analysis auditor cannot drift
+_COLLECTIVE_KINDS = COLLECTIVE_KINDS
 
 
 def _shape_bytes(type_str: str) -> int:

@@ -35,8 +35,15 @@ _DTYPE_BYTES = {
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+
+#: The collective HLO op kinds every byte account recognizes — shared
+#: by this parser's `Cost.coll` breakdown, `launch/analysis.py`'s
+#: roofline collective term, and the `repro.analysis.collectives`
+#: inventory auditor, so the kind list can never drift between the
+#: byte regression and the audit.
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+_COLLECTIVES = COLLECTIVE_KINDS
 _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "bitcast", "after-all", "partition-id", "replica-id", "iota",
              "reshape"}

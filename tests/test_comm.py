@@ -287,9 +287,11 @@ def test_pipeline_config_legacy_kwargs_removed():
     from repro.training import pipeline as PL
     with pytest.raises(TypeError, match=r"dp_wire=.*removed.*"
                                         r"comm=CommConfig"):
+        # repro-lint: disable=no-legacy-comm-kwargs (pins the error)
         PL.PipelineConfig(dp_grad_bits=4, dp_wire="ring-sharded",
                           buffer_bits=2)
     with pytest.raises(TypeError, match="compression=.*from_legacy"):
+        # repro-lint: disable=no-legacy-comm-kwargs (pins the error)
         PL.PipelineConfig(compression=CompressionConfig(mode="fp32"))
     new = PL.PipelineConfig(comm=CommConfig(
         zbuf=PlaneConfig(bits=2), dp=PlaneConfig(bits=4,
@@ -320,7 +322,8 @@ def test_pipeline_config_legacy_kwargs_removed():
 def test_sim_config_legacy_kwargs_removed():
     from repro.training import simulated as sim
     with pytest.raises(TypeError, match="dp_sharded=.*removed"):
-        sim.SimTrainConfig(
+        # deliberate violation: this test pins the rejection error
+        sim.SimTrainConfig(  # repro-lint: disable=no-legacy-comm-kwargs
             compression=CompressionConfig(mode="directq", fw_bits=2,
                                           bw_bits=4),
             dp_grad_bits=4, dp_workers=2, dp_sharded=True)

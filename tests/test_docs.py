@@ -23,3 +23,16 @@ def test_markdown_links_resolve():
 
 def test_core_and_kernels_docstrings():
     assert _load().check_docstrings() == []
+
+
+def test_env_knobs_documented():
+    assert _load().check_env_knobs() == []
+
+
+def test_gate_aggregates_all_sections(capsys):
+    """main() runs every section to completion and exits 0 only when
+    all of them are clean (no first-error abort)."""
+    assert _load().main() == 0
+    out = capsys.readouterr().out
+    for section in ("links", "docstrings", "env-knobs"):
+        assert f"docs gate [{section}]:" in out

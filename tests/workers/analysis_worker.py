@@ -1,0 +1,50 @@
+"""Subprocess worker: prove the HLO collective auditor FIRES.
+
+Builds two deliberately-broken variants of the registered ``fp16`` DP
+wire and audits them on the real 4-device host ring (a subprocess
+because the device count must be set before JAX initializes):
+
+* ``broken-fp16`` — the wire's collective additionally smuggles an
+  f32 ``psum`` of the error carry that its manifest does not declare:
+  the audit diff must name the unexpected all-reduce (and, at a
+  compressed width, call out the PR-4 f32-on-a-compressed-path bug
+  class).
+* ``naked-fp16`` — the same wire with its ``expected_collectives``
+  manifest stripped: a collective wire with no manifest must fail the
+  audit outright.
+
+Prints ``ANALYSIS <json>`` with both `WireAudit` dicts for
+tests/test_analysis.py.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import dataclasses
+import json
+
+import jax
+
+from repro.analysis.collectives import audit_wire
+from repro.comm import wires as W
+
+
+def main():
+    base = W.get_wire("fp16")
+
+    def smuggled(v, err, axis, bits, key, **kw):
+        out, new_err = base.collective(v, err, axis, bits, key, **kw)
+        # the seeded violation: an f32 all-reduce the manifest never
+        # declared (values irrelevant — only the compile is audited)
+        return out + jax.lax.psum(err, axis), new_err
+
+    broken = dataclasses.replace(base, name="broken-fp16",
+                                 collective=smuggled)
+    naked = dataclasses.replace(base, name="naked-fp16",
+                                expected_collectives=None)
+    out = {"broken": audit_wire(broken, 2).to_dict(),
+           "naked": audit_wire(naked, 2).to_dict()}
+    print("ANALYSIS " + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()
